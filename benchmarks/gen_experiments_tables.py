@@ -1,0 +1,61 @@
+"""Generate the EXPERIMENTS.md roofline / dry-run tables from recorded JSONs."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(path):
+    return [json.load(open(f)) for f in sorted(glob.glob(os.path.join(path, "*.json")))]
+
+
+def fmt_table(recs, mesh):
+    rows = []
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "MODEL/HLO | MFU | peak GiB/chip | compile s |")
+    sep = "|" + "---|" * 10
+    rows.append(hdr)
+    rows.append(sep)
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(recs, key=lambda r: (order.get(r["shape"], 9), r["arch"])):
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skip":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | skip | — | — "
+                        f"| — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL: {r.get('error','')[:40]} |")
+            continue
+        ro = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.2e} | "
+            f"{ro['memory_s']:.2e} | {ro['collective_s']:.2e} | "
+            f"{ro['dominant']} | {min(ro['useful_ratio'],9.99):.2f} | "
+            f"{ro['mfu']:.3f} | {r['memory']['peak_bytes']/2**30:.2f} | "
+            f"{r['compile_s']:.0f} |")
+    return "\n".join(rows)
+
+
+def summary(recs):
+    ok = [r for r in recs if r["status"] == "ok"]
+    skip = [r for r in recs if r["status"] == "skip"]
+    fail = [r for r in recs if r["status"] == "fail"]
+    doms = {}
+    fits = 0
+    for r in ok:
+        doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+        fits += (r["memory"]["peak_bytes"] / 2**30) <= 16.0
+    return (f"{len(ok)} ok / {len(skip)} skip / {len(fail)} fail; "
+            f"dominant terms {doms}; {fits}/{len(ok)} under 16 GiB/chip")
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    recs = load(path)
+    print("## Summary:", summary(recs))
+    for mesh in ("pod16x16", "pod2x16x16"):
+        print(f"\n### mesh {mesh}\n")
+        print(fmt_table(recs, mesh))

@@ -1,0 +1,45 @@
+"""Aggregate the dry-run artifacts into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_records(path: str = "experiments/dryrun") -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def run(path: str = "experiments/dryrun", log=print) -> Dict:
+    recs = load_records(path)
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skip = [r for r in recs if r.get("status") == "skip"]
+    fail = [r for r in recs if r.get("status") == "fail"]
+    log(f"  records: {len(ok)} ok / {len(skip)} skip / {len(fail)} fail")
+
+    rows = []
+    for r in ok:
+        ro = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "dominant": ro["dominant"],
+            "compute_s": ro["compute_s"], "memory_s": ro["memory_s"],
+            "collective_s": ro["collective_s"],
+            "useful_ratio": ro["useful_ratio"], "mfu": ro["mfu"],
+            "peak_gib": r["memory"]["peak_bytes"] / 2**30,
+        })
+    dominants = {}
+    for row in rows:
+        dominants[row["dominant"]] = dominants.get(row["dominant"], 0) + 1
+    log(f"  dominant terms: {dominants}")
+    worst = sorted((r for r in rows if r["mesh"] == "pod16x16"),
+                   key=lambda r: r["mfu"])[:5]
+    for w in worst:
+        log(f"  worst-mfu: {w['arch']}/{w['shape']} mfu={w['mfu']:.3f} "
+            f"dominant={w['dominant']}")
+    return {"rows": rows, "dominant_histogram": dominants,
+            "n_ok": len(ok), "n_skip": len(skip), "n_fail": len(fail)}

@@ -1,0 +1,105 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  table1_sim     -> paper Table I   (memory / time, Single vs PipeAdapter vs RingAda)
+  convergence    -> paper Fig. 3    (loss curves + wall clock, real CPU training)
+  pipeline_bench -> pipeline ticks + utilization per unfreeze depth
+  kernel_bench   -> Pallas kernels: correctness + TPU roofline terms
+  roofline_bench -> aggregate dry-run artifacts (EXPERIMENTS.md SS Roofline)
+
+Prints ``name,us_per_call,derived`` CSV rows; writes full JSON artifacts to
+experiments/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "bench")
+
+
+def _emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,convergence,pipeline,kernels,roofline")
+    ap.add_argument("--fast", action="store_true",
+                    help="shrink round/step counts for CI")
+    args, _ = ap.parse_known_args()
+    wanted = set(args.only.split(",")) if args.only else {
+        "table1", "convergence", "pipeline", "kernels", "roofline"}
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    results = {}
+    print("name,us_per_call,derived")
+
+    if "table1" in wanted:
+        from benchmarks import table1_sim
+        t0 = time.time()
+        r = table1_sim.run(rounds=50 if args.fast else 200,
+                           log=lambda m: print(f"#{m}"))
+        results["table1"] = r
+        _emit("table1.single", r["single"]["s_per_round"] * 1e6,
+              f"mem={r['single']['peak_memory_mb']:.1f}MB")
+        _emit("table1.pipe_adapter", r["pipe_adapter"]["s_per_round"] * 1e6,
+              f"mem={r['pipe_adapter']['peak_memory_mb']:.1f}MB;"
+              f"speedup={r['speedup_vs_single']['pipe_adapter']:.2f}x")
+        _emit("table1.ringada", r["ringada"]["s_per_round"] * 1e6,
+              f"mem={r['ringada']['peak_memory_mb']:.1f}MB;"
+              f"speedup={r['speedup_vs_single']['ringada']:.2f}x")
+
+    if "convergence" in wanted:
+        from benchmarks import convergence
+        r = convergence.run(steps=24 if args.fast else 60,
+                            log=lambda m: print(f"#{m}"))
+        results["convergence"] = r
+        for scheme in ("all_hot", "ringada"):
+            _emit(f"convergence.{scheme}",
+                  r[scheme]["wall_s"] * 1e6 / max(len(r[scheme]["loss_curve"]), 1),
+                  f"final_loss={r[scheme]['final_loss']:.4f}")
+
+    if "pipeline" in wanted:
+        from benchmarks import pipeline_bench
+        r = pipeline_bench.run(log=lambda m: print(f"#{m}"))
+        results["pipeline"] = r
+        for k, v in r["tick_counts"].items():
+            _emit(f"pipeline.ticks.{k}", 0.0,
+                  f"fwd={v['fwd_ticks']};bwd={v['bwd_ticks']}")
+
+    if "kernels" in wanted:
+        from benchmarks import kernel_bench
+        r = kernel_bench.run(log=lambda m: print(f"#{m}"))
+        results["kernels"] = r
+        _emit("kernels.adapter_fused",
+              r["adapter_fused"]["tpu_mem_term_fused_us"],
+              f"err={r['adapter_fused']['max_err']:.4f};"
+              f"bound={r['adapter_fused']['fusion_speedup_bound']:.2f}x")
+        _emit("kernels.rwkv_scan", r["rwkv_scan"]["chunked_tpu_compute_us"],
+              f"err={r['rwkv_scan']['max_err']:.5f}")
+        _emit("kernels.flash_attention", 0.0,
+              f"err={r['flash_attention']['max_err']:.4f};"
+              f"traffic={r['flash_attention']['traffic_reduction']:.1f}x")
+
+    if "roofline" in wanted:
+        from benchmarks import roofline_bench
+        r = roofline_bench.run(log=lambda m: print(f"#{m}"))
+        results["roofline"] = {k: v for k, v in r.items() if k != "rows"}
+        results["roofline_rows"] = r["rows"]
+        _emit("roofline.records", 0.0,
+              f"ok={r['n_ok']};skip={r['n_skip']};fail={r['n_fail']}")
+
+    with open(os.path.join(RESULTS_DIR, "results.json"), "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    print(f"# artifacts -> {os.path.relpath(RESULTS_DIR)}/results.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: RingAda adapter fine-tuning with scheduled layer unfreezing.
+
+Runs in ~2 minutes on CPU: builds a reduced StableLM-family model, fine-tunes
+its adapters with the paper's top-down unfreezing schedule (watch ``boundary``
+fall as depth grows), then serves a few greedy tokens from the tuned model.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import TrainConfig, get_config
+from repro.launch.train import train_pjit
+from repro.models import transformer as tfm
+
+
+def main():
+    cfg = get_config("stablelm-3b").reduced()
+    print(f"arch={cfg.name} (reduced): {cfg.n_layers}L d={cfg.d_model} "
+          f"adapter_m={cfg.adapter.bottleneck}")
+
+    tc = TrainConfig(learning_rate=2e-3, batch_size=8, seq_len=64,
+                     unfreeze_interval=8,      # paper uses 40; shrunk for demo
+                     warmup_steps=2)
+    out = train_pjit(cfg, tc, steps=32, log_every=4, scheme="ringada")
+    params = out["params"]
+
+    # greedy continuation from the fine-tuned model
+    prompt = jnp.array([[7, 42, 199, 23, 5, 77, 3, 11]], dtype=jnp.int32)
+    _, cache = tfm.prefill(params, prompt, cfg, seq_len=64)
+    tok = jnp.argmax(tfm.forward(params, prompt, cfg)[0][:, -1], -1
+                     )[:, None].astype(jnp.int32)
+    gen = []
+    for _ in range(12):
+        gen.append(int(tok[0, 0]))
+        logits, cache = tfm.decode_step(params, tok, cache, cfg)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    print("greedy continuation:", gen)
+
+
+if __name__ == "__main__":
+    main()

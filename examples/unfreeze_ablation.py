@@ -1,0 +1,54 @@
+"""Ablation: how the unfreeze interval k trades compute for convergence.
+
+Sweeps the paper's k (steps per adapter unfreeze) and reports final loss,
+activation-memory footprint per boundary (from memory_analysis), and wall time
+— the compute/quality trade-off behind Fig. 3(a).
+
+    PYTHONPATH=src python examples/unfreeze_ablation.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs import TrainConfig, get_config
+from repro.core import training
+from repro.launch.train import train_pjit
+from repro.models import params as prm
+from repro.optim import adamw
+
+
+def main():
+    cfg = get_config("stablelm-3b").reduced(n_layers=8, repeats=8)
+    steps = 32
+
+    print("=== memory vs boundary (compiled temp bytes) ===")
+    params = prm.materialize(prm.param_defs(cfg), jax.random.key(0), cfg.dtype)
+    opt = adamw.init(training.full_trainable(params))
+    import jax.numpy as jnp
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (8, 64), 0,
+                                          cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.key(2), (8, 64), 0,
+                                          cfg.vocab_size)}
+    tc = TrainConfig()
+    for b in (0, 4, 7):
+        step = jax.jit(training.make_train_step(cfg, tc, b))
+        mem = step.lower(params, opt, batch).compile().memory_analysis()
+        print(f"  boundary={b} (depth {cfg.repeats - b:2d}): "
+              f"temp={mem.temp_size_in_bytes / 2**20:6.1f} MiB")
+
+    print("=== convergence vs unfreeze interval k ===")
+    for k in (4, 8, 1_000_000):
+        label = f"k={k}" if k < 1_000_000 else "k=inf (top-1 only)"
+        tc = TrainConfig(learning_rate=2e-3, batch_size=8, seq_len=64,
+                         unfreeze_interval=k, warmup_steps=2)
+        out = train_pjit(cfg, tc, steps=steps, log_every=steps,
+                         scheme="ringada", log=lambda *a: None)
+        h = out["history"][-1]
+        print(f"  {label:22s} final_loss={h['loss']:.4f} "
+              f"final_depth={h['depth']:2d} wall={out['wall_s']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

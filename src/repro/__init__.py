@@ -1,0 +1,7 @@
+"""RingAda reproduction: pipelined PEFT fine-tuning with scheduled layer unfreezing.
+
+Multi-pod JAX framework implementing Li, Chen & Wu, "RingAda: Pipelining Large
+Model Fine-Tuning on Edge Devices with Scheduled Layer Unfreezing" (CS.DC 2025),
+adapted to TPU SPMD (see DESIGN.md).
+"""
+__version__ = "1.0.0"

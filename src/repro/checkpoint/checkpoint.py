@@ -1,0 +1,89 @@
+"""Checkpointing: flat-key .npz payloads + JSON metadata, sharding-aware restore.
+
+PEFT-aware: ``save_adapters_only=True`` stores just the trainable set (adapters +
+head + step), which is what RingAda clients would persist/exchange — a few MB even
+for a 7B backbone.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEP = "::"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(jax.device_get(leaf))
+        flat[key] = arr
+    return flat
+
+
+def _key_filter(key: str, adapters_only: bool) -> bool:
+    if not adapters_only:
+        return True
+    return ("adapter" in key.split(SEP)) or key.startswith("head")
+
+
+def save(path: str, params: Any, *, step: int = 0, extra: Optional[Dict] = None,
+         adapters_only: bool = False) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = {k: v for k, v in _flatten(params).items()
+            if _key_filter(k, adapters_only)}
+    # bfloat16 isn't npz-native: store raw uint16 + dtype tag
+    payload, dtypes = {}, {}
+    for k, v in flat.items():
+        if v.dtype == jnp.bfloat16:
+            payload[k] = v.view(np.uint16)
+            dtypes[k] = "bfloat16"
+        else:
+            payload[k] = v
+            dtypes[k] = str(v.dtype)
+    np.savez(path + ".npz", **payload)
+    meta = {"step": step, "dtypes": dtypes, "adapters_only": adapters_only,
+            "extra": extra or {}}
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+
+
+def restore(path: str, like: Any, *, mesh=None, specs: Any = None,
+            ) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``like``; missing keys keep ``like`` values.
+
+    With (mesh, specs) the restored leaves are device_put with their
+    NamedSharding — restores shard directly onto production meshes.
+    """
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    data = np.load(path + ".npz")
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    spec_leaves = (jax.tree.leaves(specs, is_leaf=lambda s: s is None or
+                                   hasattr(s, "__len__") or True)
+                   if specs is not None else None)
+
+    out = []
+    for i, (pathk, leaf) in enumerate(flat_like):
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in pathk)
+        if key in data.files:
+            arr = data[key]
+            if meta["dtypes"].get(key) == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            arr = arr.reshape(np.shape(leaf))
+            if mesh is not None and specs is not None:
+                from jax.sharding import NamedSharding
+                arr = jax.device_put(arr, NamedSharding(mesh, spec_leaves[i]))
+            else:
+                arr = jnp.asarray(arr)
+            out.append(arr)
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(treedef, out), meta

@@ -1,0 +1,26 @@
+"""Architecture registry — importing this package registers every config."""
+from repro.configs.base import (AdapterConfig, InputShape, INPUT_SHAPES,
+                                ModelConfig, MoEConfig, SSMConfig, TrainConfig,
+                                get_config, list_configs, register,
+                                shape_runnable)
+
+from repro.configs import (  # noqa: F401  (registration side-effects)
+    starcoder2_7b,
+    stablelm_3b,
+    moonshot_v1_16b_a3b,
+    seamless_m4t_large_v2,
+    hymba_1p5b,
+    qwen2p5_3b,
+    llama3p2_vision_11b,
+    rwkv6_7b,
+    olmoe_1b_7b,
+    llama4_maverick_400b_a17b,
+    mbert_squad,
+)
+
+ASSIGNED = [
+    "starcoder2-7b", "stablelm-3b", "moonshot-v1-16b-a3b",
+    "seamless-m4t-large-v2", "hymba-1.5b", "qwen2.5-3b",
+    "llama-3.2-vision-11b", "rwkv6-7b", "olmoe-1b-7b",
+    "llama4-maverick-400b-a17b",
+]

@@ -1,0 +1,287 @@
+"""Configuration system for the RingAda reproduction framework.
+
+Every architecture in the public-pool assignment is expressed as a
+:class:`ModelConfig`. A config fully determines:
+
+  * the layer pattern (which block kinds repeat, how often),
+  * attention/MoE/SSM hyper-parameters,
+  * the adapter (PEFT) insertion (the paper's technique),
+  * which input shapes are runnable (``long_500k`` needs sub-quadratic attention).
+
+Configs are plain frozen dataclasses registered under an ``--arch <id>`` name via
+:func:`register`. ``repro.configs`` imports every per-arch module so the registry is
+always populated after ``import repro.configs``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Block kinds
+# ---------------------------------------------------------------------------
+# dense   : GQA self-attention + dense FFN
+# moe     : GQA self-attention + mixture-of-experts FFN
+# rwkv    : RWKV-6 time-mix + channel-mix (attention-free)
+# hymba   : parallel attention + Mamba(SSM) heads sharing one residual, + FFN
+# cross   : self-attention + cross-attention (encoder memory) + dense FFN
+BLOCK_KINDS = ("dense", "moe", "rwkv", "hymba", "cross")
+
+
+@dataclass(frozen=True)
+class AdapterConfig:
+    """Serial adapter (Houlsby / MAD-X style), the paper's trainable module."""
+
+    bottleneck: int = 64          # m — bottleneck dimension
+    activation: str = "gelu"      # σ(·)
+    # Zero-init of W_up makes a frozen (never-trained) adapter an exact identity,
+    # which is how RingAda "deactivates" bottom-layer adapters.
+    zero_init_up: bool = True
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 64
+    top_k: int = 8
+    d_expert: int = 1024          # per-expert hidden dim
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01   # load-balance loss weight
+    router_z_weight: float = 1e-3
+    # FSDP-shard expert weights over the data axes (required at 400B scale);
+    # small-expert MoEs turn this off to kill the per-layer all-gathers
+    # (EXPERIMENTS.md §Perf, collective-bound iteration).
+    fsdp_experts: bool = True
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Covers both RWKV-6 and Mamba-style (hymba) recurrences."""
+
+    state_size: int = 16          # mamba N; rwkv uses head_dim x head_dim state
+    head_dim: int = 64            # rwkv head size
+    dt_rank: int = 64             # mamba Δ low-rank
+    conv_width: int = 4           # mamba local conv
+    decay_lora: int = 64          # rwkv6 data-dependent decay LoRA dim
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    # ----- backbone dimensions -----
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None   # default d_model // n_heads
+    # ----- layer pattern -----
+    # pattern entries: (block_kind, count); whole pattern repeats `repeats` times,
+    # n_layers == repeats * sum(counts).
+    pattern: Tuple[Tuple[str, int], ...] = (("dense", 1),)
+    repeats: Optional[int] = None    # default n_layers // pattern length
+    # ----- attention details -----
+    rope: bool = True
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    sliding_window: Optional[int] = None     # tokens; None = full attention
+    # ----- sub-configs -----
+    adapter: AdapterConfig = field(default_factory=AdapterConfig)
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # ----- encoder-decoder (audio) -----
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    enc_is_causal: bool = False
+    # ----- VLM / audio stubbed frontends -----
+    n_frontend_tokens: int = 0       # image patches / audio frames supplied pre-embedded
+    frontend: Optional[str] = None   # "vision" | "audio" | None
+    # ----- head -----
+    head_out: Optional[int] = None   # None => LM head (vocab); e.g. 2 = QA span
+    vocab_pad_to: int = 256          # pad embed/head vocab dim for sharding
+    # ----- serving -----
+    kv_quant: bool = False           # int8 KV cache (+per-row bf16 scales)
+    # ----- misc -----
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    activation: str = "silu"         # FFN activation (gelu for BERT-era)
+    glu: bool = True                 # gated FFN (SwiGLU); False = classic 2-matrix FFN
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    max_seq_len: int = 524_288
+    source: str = ""                 # citation from the assignment table
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.n_heads, 1))
+        per_rep = sum(c for _, c in self.pattern)
+        if self.repeats is None:
+            assert self.n_layers % per_rep == 0, (self.name, self.n_layers, per_rep)
+            object.__setattr__(self, "repeats", self.n_layers // per_rep)
+        assert self.repeats * per_rep == self.n_layers, (
+            f"{self.name}: pattern {self.pattern} x {self.repeats} != {self.n_layers} layers")
+        for kind, _ in self.pattern:
+            assert kind in BLOCK_KINDS, kind
+        if any(k == "moe" for k, _ in self.pattern):
+            assert self.moe is not None, f"{self.name}: moe pattern without MoEConfig"
+        if any(k in ("rwkv", "hymba") for k, _ in self.pattern):
+            assert self.ssm is not None, f"{self.name}: ssm pattern without SSMConfig"
+
+    # ------------------------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        p = self.vocab_pad_to
+        return -(-self.vocab_size // p) * p
+
+    @property
+    def out_dim(self) -> int:
+        """Width of the head output (padded for LM heads; see models.transformer.head
+        which biases pad logits to -inf)."""
+        return self.head_out or self.padded_vocab
+
+    @property
+    def layers_per_repeat(self) -> int:
+        return sum(c for _, c in self.pattern)
+
+    @property
+    def attention_free(self) -> bool:
+        return all(k == "rwkv" for k, _ in self.pattern)
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if the arch can serve 500k-token contexts with O(1)/O(window) state."""
+        kinds = {k for k, _ in self.pattern}
+        if kinds <= {"rwkv"}:
+            return True
+        if "hymba" in kinds:
+            return True
+        return self.sliding_window is not None
+
+    @property
+    def kv_cacheable(self) -> bool:
+        return any(k in ("dense", "moe", "hymba", "cross") for k, _ in self.pattern)
+
+    def param_count(self) -> int:
+        """Exact backbone parameter count (matches models.params tree)."""
+        from repro.models import params as P  # local import to avoid cycle
+
+        return P.count_params(P.param_defs(self))
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k experts instead of all)."""
+        from repro.models import params as P
+
+        return P.count_params(P.param_defs(self), active_only=True)
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """Tiny same-family variant used by CPU smoke tests (<=2 repeats, d<=512)."""
+        small: Dict = dict(
+            d_model=min(self.d_model, 256),
+            n_heads=min(self.n_heads, 4),
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else self.n_kv_heads,
+            d_ff=min(self.d_ff, 512),
+            vocab_size=min(self.vocab_size, 512),
+            head_dim=64,
+            max_seq_len=4096,
+        )
+        per_rep = self.layers_per_repeat
+        reps = 1 if per_rep > 1 else 2
+        small["repeats"] = reps
+        small["n_layers"] = reps * per_rep
+        if self.moe is not None:
+            small["moe"] = replace(self.moe, n_experts=4, top_k=min(self.moe.top_k, 2),
+                                   d_expert=128)
+        if self.ssm is not None:
+            small["ssm"] = replace(self.ssm, state_size=min(self.ssm.state_size, 8),
+                                   head_dim=32, dt_rank=16, decay_lora=16)
+        if self.enc_dec:
+            small["n_enc_layers"] = 2
+        if self.n_frontend_tokens:
+            small["n_frontend_tokens"] = 16
+        if self.sliding_window:
+            small["sliding_window"] = 128
+        small["adapter"] = replace(self.adapter, bottleneck=16)
+        if self.n_kv_heads == self.n_heads:
+            small["n_kv_heads"] = small["n_heads"]
+        small.update(overrides)
+        return replace(self, **small)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_runnable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Is (cfg, shape) a runnable combination? Returns (ok, reason-if-not)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("full quadratic attention with an unbounded KV cache; no "
+                       "sliding-window/SSM variant for this arch (see DESIGN.md §5)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Training setup (the paper's Algorithm 1 knobs)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 1e-3
+    weight_decay: float = 0.01
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    warmup_steps: int = 20
+    batch_size: int = 8
+    seq_len: int = 128
+    steps: int = 200
+    # --- RingAda schedule (Algorithm 1) ---
+    initial_unfreeze_depth: int = 1   # d: head + top-most adapter
+    unfreeze_interval: int = 40       # k: unfreeze one more adapter every k steps
+    max_unfreeze_depth: Optional[int] = None   # default n_layers
+    local_iterations: int = 1         # I per initiator
+    # --- pipeline ---
+    n_stages: int = 4
+    n_microbatches: int = 8
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    assert cfg.name not in _REGISTRY, f"duplicate arch id {cfg.name}"
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    import repro.configs  # noqa: F401  (populate registry)
+
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> List[str]:
+    import repro.configs  # noqa: F401
+
+    return sorted(_REGISTRY)

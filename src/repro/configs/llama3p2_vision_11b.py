@@ -1,0 +1,23 @@
+"""Llama-3.2-Vision-11B [hf:meta-llama/Llama-3.2-11B-Vision] — VLM decoder.
+
+Assigned: 40L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256.
+Cross-attention image layers every 5th block (8 of 40), realized as the layer
+pattern [dense x4, cross x1] x 8. The ViT vision tower + projector is a stub per
+the carve-out: ``input_specs`` supplies projected patch embeddings [B, T_img, d].
+Gated cross-attention (tanh gate, zero-init) matches the real model.
+Full attention => ``long_500k`` skipped.
+"""
+from repro.configs.base import AdapterConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab_size=128256,
+    pattern=(("dense", 4), ("cross", 1)), repeats=8,
+    n_frontend_tokens=1024, frontend="vision",
+    rope=True, rope_theta=5e5,
+    glu=True, activation="silu",
+    adapter=AdapterConfig(bottleneck=64),
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+))

@@ -1,0 +1,20 @@
+"""Moonlight-16B-A3B [hf:moonshotai/Moonlight-16B-A3B] — MoE decoder.
+
+Assigned: 48L d_model=2048 16H (GQA kv=16) d_ff=1408 vocab=163840, MoE 64e top-6.
+DeepSeek-style fine-grained experts (d_expert=1408) + one always-on shared expert.
+Full attention => ``long_500k`` skipped.
+"""
+from repro.configs.base import AdapterConfig, ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab_size=163840,
+    pattern=(("moe", 1),),
+    rope=True,
+    moe=MoEConfig(n_experts=64, top_k=6, d_expert=1408),
+    glu=True, activation="silu",
+    adapter=AdapterConfig(bottleneck=64),
+    source="hf:moonshotai/Moonlight-16B-A3B",
+))

@@ -1,0 +1,19 @@
+"""OLMoE-1B-7B [arXiv:2409.02060] — MoE decoder, 64 experts top-8.
+
+Assigned: 16L d_model=2048 16H (GQA kv=16) d_ff=1024 vocab=50304, MoE 64e top-8.
+Fine-grained experts (d_expert=1024). Full attention => ``long_500k`` skipped.
+"""
+from repro.configs.base import AdapterConfig, ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1024, vocab_size=50304,
+    pattern=(("moe", 1),),
+    rope=True,
+    moe=MoEConfig(n_experts=64, top_k=8, d_expert=1024),
+    glu=True, activation="silu",
+    adapter=AdapterConfig(bottleneck=64),
+    source="arXiv:2409.02060",
+))

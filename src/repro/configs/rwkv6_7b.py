@@ -1,0 +1,22 @@
+"""RWKV-6 "Finch" 7B [arXiv:2404.05892] — attention-free RNN with data-dependent decay.
+
+Assigned: 32L d_model=4096 (attn-free) d_ff=14336 vocab=65536.
+Head size 64 (64 heads), data-dependent token-shift (ddlerp) and decay LoRA.
+O(1) recurrent state => ``long_500k`` runs natively. Adapters attach after each
+block's channel-mix — the paper's technique is block-structural, so it applies
+unchanged to attention-free architectures (DESIGN.md §5).
+"""
+from repro.configs.base import AdapterConfig, ModelConfig, SSMConfig, register
+
+CONFIG = register(ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    n_layers=32, d_model=4096, n_heads=64, n_kv_heads=64, head_dim=64,
+    d_ff=14336, vocab_size=65536,
+    pattern=(("rwkv", 1),),
+    rope=False,                # RWKV has no positional encoding beyond recurrence
+    ssm=SSMConfig(head_dim=64, decay_lora=64),
+    glu=False, activation="relu",   # channel-mix uses squared ReLU internally
+    adapter=AdapterConfig(bottleneck=64),
+    source="arXiv:2404.05892",
+))

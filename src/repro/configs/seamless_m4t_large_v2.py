@@ -1,0 +1,24 @@
+"""SeamlessM4T-large-v2 [arXiv:2308.11596] — encoder-decoder, audio frontend stubbed.
+
+Assigned: 24L d_model=1024 16H (GQA kv=16) d_ff=8192 vocab=256206.
+Per the carve-out, the mel-spectrogram + conformer feature extractor is a stub:
+``input_specs`` supplies pre-computed frame embeddings [B, T_a, d_model]. "24L" is
+read per stack (24 encoder + 24 decoder, matching the real M4T-v2 text stacks).
+Full attention => ``long_500k`` skipped.
+"""
+from repro.configs.base import AdapterConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=8192, vocab_size=256206,
+    pattern=(("cross", 1),),                 # decoder layers cross-attend encoder
+    enc_dec=True, n_enc_layers=24,
+    n_frontend_tokens=4096, frontend="audio",
+    rope=True,
+    glu=False, activation="relu",            # m4t uses ReLU FFNs
+    norm="layernorm",
+    adapter=AdapterConfig(bottleneck=64),
+    source="arXiv:2308.11596",
+))

@@ -1,0 +1,18 @@
+"""StableLM-3B [hf:stabilityai/stablelm-2-1_6b family] — dense MHA decoder.
+
+Assigned: 32L d_model=2560 32H (GQA kv=32) d_ff=6912 vocab=50304.
+Full attention (kv == heads) => ``long_500k`` is skipped (see DESIGN.md §5).
+"""
+from repro.configs.base import AdapterConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="stablelm-3b",
+    family="dense",
+    n_layers=32, d_model=2560, n_heads=32, n_kv_heads=32,
+    d_ff=6912, vocab_size=50304,
+    pattern=(("dense", 1),),
+    rope=True,
+    glu=True, activation="silu",
+    adapter=AdapterConfig(bottleneck=64),
+    source="hf:stabilityai/stablelm-2-1_6b",
+))

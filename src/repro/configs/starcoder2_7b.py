@@ -1,0 +1,20 @@
+"""StarCoder2-7B [arXiv:2402.19173] — dense GQA decoder with RoPE.
+
+Assigned: 32L d_model=4608 36H (GQA kv=4) d_ff=18432 vocab=49152.
+The real model uses sliding-window attention (4096), which we keep — it is what
+makes the ``long_500k`` decode shape runnable for this arch (O(window) cache).
+"""
+from repro.configs.base import AdapterConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="starcoder2-7b",
+    family="dense",
+    n_layers=32, d_model=4608, n_heads=36, n_kv_heads=4,
+    d_ff=18432, vocab_size=49152,
+    pattern=(("dense", 1),),
+    rope=True, rope_theta=1e5,
+    sliding_window=4096,
+    glu=False, activation="gelu",          # starcoder2 uses a plain GELU MLP
+    adapter=AdapterConfig(bottleneck=64),
+    source="arXiv:2402.19173",
+))

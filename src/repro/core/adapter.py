@@ -1,0 +1,42 @@
+"""Serial adapter module — the paper's parameter-efficient trainable unit.
+
+RingAda eq. (1):    h  <-  h + sigma(h @ W_down) @ W_up
+
+The adapter sits after each block's FFN ("add & layer norm") sublayer, exactly as in
+the serial-adapter variant the paper adopts (one adapter per transformer block).
+``W_up`` is zero-initialized, so an adapter that has never been unfrozen is an exact
+identity — this is what lets RingAda "deactivate" bottom-layer adapters and early-stop
+backpropagation at the lowest *unfrozen* adapter without changing the function the
+frozen trunk computes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(name: str):
+    return {"gelu": jax.nn.gelu, "relu": jax.nn.relu, "silu": jax.nn.silu}[name]
+
+
+def apply_adapter(p: Dict[str, jax.Array], h: jax.Array, *,
+                  activation: str = "gelu", impl: str = "jnp") -> jax.Array:
+    """Apply the serial adapter to ``h`` ([..., D])."""
+    if impl == "pallas":
+        from repro.kernels import ops
+
+        return ops.adapter_fused(h, p["w_down"], p["w_up"], activation=activation)
+    mid = _act(activation)(h.astype(jnp.float32) @ p["w_down"].astype(jnp.float32))
+    out = mid @ p["w_up"].astype(jnp.float32)
+    return h + out.astype(h.dtype)
+
+
+def adapter_param_count(d_model: int, bottleneck: int) -> int:
+    return 2 * d_model * bottleneck
+
+
+def adapter_flops(tokens: int, d_model: int, bottleneck: int) -> int:
+    """Forward FLOPs for one adapter over ``tokens`` tokens."""
+    return 4 * tokens * d_model * bottleneck

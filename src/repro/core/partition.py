@@ -1,0 +1,76 @@
+"""Coordinator-side layer assignment (RingAda Algorithm 1, line 1).
+
+Given per-device compute speeds and memory budgets, assign each device a
+*contiguous* span of transformer blocks so the bottleneck stage time is minimized
+(the paper's example assignment 4:5:2:3 arises from heterogeneous devices).
+
+Solved by binary search over the bottleneck time + greedy feasibility check —
+optimal for contiguous partitions with monotone per-device costs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    """State information a client uploads at initialization: (R_u, C_comp, C_mem)."""
+
+    compute_speed: float          # relative FLOP/s (1.0 = reference device)
+    memory_mb: float              # DRAM budget
+    link_mbps: float = 1000.0     # egress rate to the next ring neighbour
+
+
+def assign_layers(layer_costs: Sequence[float], layer_mem_mb: Sequence[float],
+                  devices: Sequence[DeviceProfile]) -> List[Tuple[int, int]]:
+    """Return [(begin, end)] block spans per device (end exclusive), in ring order.
+
+    ``layer_costs``: per-block forward+backward time on the reference device.
+    Minimizes max_u (sum of assigned costs / speed_u) s.t. memory fits.
+    """
+    n, U = len(layer_costs), len(devices)
+    assert n >= U, "fewer blocks than devices"
+
+    def feasible(T: float) -> Optional[List[Tuple[int, int]]]:
+        spans, i = [], 0
+        for u, dev in enumerate(devices):
+            t = m = 0.0
+            j = i
+            remaining_devices = U - u - 1
+            while j < n and n - j > remaining_devices:
+                dt = layer_costs[j] / dev.compute_speed
+                dm = layer_mem_mb[j]
+                if t + dt > T or m + dm > dev.memory_mb:
+                    break
+                t, m = t + dt, m + dm
+                j += 1
+            if j == i:                       # must take at least one block
+                if layer_mem_mb[i] > dev.memory_mb:
+                    return None
+                j = i + 1
+            spans.append((i, j))
+            i = j
+        return spans if i == n else None
+
+    lo = max(c / max(d.compute_speed for d in devices) for c in layer_costs)
+    hi = sum(layer_costs) / min(d.compute_speed for d in devices)
+    best = feasible(hi)
+    if best is None:
+        raise ValueError("memory budgets cannot hold the model")
+    for _ in range(64):
+        mid = (lo + hi) / 2
+        got = feasible(mid)
+        if got is not None:
+            best, hi = got, mid
+        else:
+            lo = mid
+    return best
+
+
+def uniform_assignment(n_blocks: int, n_stages: int) -> List[Tuple[int, int]]:
+    """Even split used by the SPMD shard_map pipeline (requires divisibility)."""
+    assert n_blocks % n_stages == 0, (n_blocks, n_stages)
+    per = n_blocks // n_stages
+    return [(i * per, (i + 1) * per) for i in range(n_stages)]

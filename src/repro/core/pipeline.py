@@ -1,0 +1,224 @@
+"""RingAda ring pipeline on an SPMD ``stage`` mesh axis (shard_map + ppermute).
+
+The paper's ring of edge devices maps to a mesh axis: stage ``s`` holds repeats
+``[s*Lps, (s+1)*Lps)`` of the block stack (params stage-stacked and sharded), plus a
+replicated copy of the embedding and head — exactly the paper's deployment.
+
+One *training round* (Algorithm 1, initiator = ``owner``):
+
+  1. The owner embeds its local microbatches and ships them to stage 0 with a single
+     static ``ppermute`` (paper: initiator sends embeddings to the client holding the
+     lowest Trm block).
+  2. **Phase A — frozen trunk, forward-only streaming**: stages ``[0, F)`` hold only
+     frozen adapters (``F = boundary / Lps``). Their tick-pipeline runs entirely
+     under ``stop_gradient``: ``M + F - 1`` ticks, never any backward — the paper's
+     "clients with all-frozen adapters continuously forward consecutive batches".
+  3. **Phase B — hot region, strict 1F1B**: stages ``[F, S)`` run a differentiable
+     tick-pipeline (``M + S_hot - 1`` ticks). ``jax.grad`` through the tick scan +
+     ``ppermute`` yields the reverse-tick backward pipeline automatically (cotangents
+     ppermute backwards along the ring), early-stopping at stage F — the paper's
+     *terminator*.
+  4. The last stage's outputs return to the owner (static ppermute); the owner
+     computes the loss against its local labels (labels never leave their device),
+     the head gradient is ``psum``-shared, and adapter gradients stay local to their
+     stage — no weight-gradient traffic, matching the paper's communication pattern.
+
+SPMD adaptation (DESIGN.md §6): per-device *program* asymmetry is impossible under
+SPMD, so the paper's per-device savings appear as globally shorter backward tick
+scans and absent residual stashes for phase A, uniform across devices. The
+discrete-event simulator (core/simulator.py) models the true MPMD overlap.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import transformer as tfm
+from repro.models.blocks import BlockCtx, apply_block
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Stage-stacked parameters
+# ---------------------------------------------------------------------------
+
+
+def stage_stack(params: Dict[str, Any], cfg: ModelConfig, n_stages: int
+                ) -> Tuple[Any, Dict[str, Any]]:
+    """Split params into (stage_blocks, shared).
+
+    stage_blocks: block-stack leaves reshaped [S, R/S, C, ...] (shard on 'stage').
+    shared: embed / final_norm / head (+meta), replicated on every stage — the
+    paper keeps Emb + Hed copies on every client.
+    """
+    assert len(cfg.pattern) == 1, "ring pipeline requires a uniform layer pattern"
+    R = cfg.repeats
+    assert R % n_stages == 0, (R, n_stages)
+    lps = R // n_stages
+    entry = params["blocks"][0]
+    stage_blocks = jax.tree.map(
+        lambda x: x.reshape((n_stages, lps) + x.shape[1:]), entry)
+    shared = {k: v for k, v in params.items() if k != "blocks"}
+    return stage_blocks, shared
+
+
+def unstack(stage_blocks, cfg: ModelConfig, params: Dict[str, Any],
+            shared: Dict[str, Any]) -> Dict[str, Any]:
+    """Inverse of stage_stack: rebuild the flat [R, C, ...] param tree."""
+    R = cfg.repeats
+    entry = jax.tree.map(lambda x: x.reshape((R,) + x.shape[2:]), stage_blocks)
+    return {**params, **shared, "blocks": (entry,)}
+
+
+# ---------------------------------------------------------------------------
+# Per-stage layer application
+# ---------------------------------------------------------------------------
+
+
+def _apply_stage_layers(cfg: ModelConfig, stage_params, h: Array,
+                        positions: Array) -> Array:
+    """Apply this stage's local repeats (leaves [Lps, C, ...]) to h [mb, seq, D]."""
+    ctx = BlockCtx(cfg=cfg, mode="seq", positions=positions, causal=True,
+                   q_chunk=tfm.pick_chunk(h.shape[1]))
+    kind = cfg.pattern[0][0]
+
+    def body(carry, p_slice):
+        def inner(c2, p2):
+            h3, _, _ = apply_block(kind, cfg, p2, c2, ctx, None)
+            return h3, None
+
+        h2, _ = lax.scan(inner, carry, p_slice)
+        return h2, None
+
+    h, _ = lax.scan(body, h, stage_params)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# One RingAda round as a shard_map'd, differentiable function
+# ---------------------------------------------------------------------------
+
+
+def make_ring_round(cfg: ModelConfig, mesh: Mesh, *, n_stages: int, owner: int,
+                    boundary: int, n_micro: int):
+    """Build ``loss_fn(stage_blocks, shared, tokens, labels) -> loss``.
+
+    Static per build: (owner, boundary). boundary must be stage-aligned.
+    Global input shapes:
+      stage_blocks leaves [S, lps, C, ...]   sharded P('stage')
+      shared                                  replicated P()
+      tokens / labels [S, M, mb, seq]         sharded P('stage')  (per-client data)
+    """
+    R = cfg.repeats
+    lps = R // n_stages
+    assert boundary % lps == 0, f"boundary {boundary} not stage-aligned (lps={lps})"
+    F = boundary // lps
+    S_hot = n_stages - F
+    M = n_micro
+    fwd_perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def round_fn(stage_blocks, shared, tokens, labels):
+        s = lax.axis_index("stage")
+        my_blocks = jax.tree.map(lambda x: x[0], stage_blocks)    # [lps, C, ...]
+        my_tokens = tokens[0]                                     # [M, mb, seq]
+        my_labels = labels[0]
+        mb, seq = my_tokens.shape[1], my_tokens.shape[2]
+        pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (mb, seq))
+
+        # 1. owner embeds; one static hop owner -> stage 0
+        emb_all = jax.vmap(lambda t: tfm.embed(cfg, shared, t, pos))(my_tokens)
+        shift0 = [(i, (i - owner) % n_stages) for i in range(n_stages)]
+        emb_at0 = lax.ppermute(emb_all, "stage", shift0)
+
+        def phase(blocks_slice, h_inject, first_stage: int, depth: int):
+            """Tick pipeline over stages [first, first+depth); returns the
+            [M, mb, seq, D] outputs emitted by stage first+depth-1 (stage-local:
+            only meaningful on that stage)."""
+            T = M + depth - 1
+            rel = s - first_stage
+
+            def tick(carry, t):
+                buf = carry
+                inject = (rel == 0) & (t < M)
+                incoming = jnp.where(inject, h_inject[jnp.minimum(t, M - 1)], buf)
+                active = (rel >= 0) & (rel < depth) & (t - rel >= 0) & (t - rel < M)
+                out = _apply_stage_layers(cfg, blocks_slice, incoming, pos)
+                out = jnp.where(active, out, incoming)
+                nxt = lax.ppermute(out, "stage", fwd_perm)
+                return nxt, out
+
+            _, emits = lax.scan(tick, jnp.zeros_like(h_inject[0]),
+                                jnp.arange(T))
+            take = jnp.arange(M) + depth - 1
+            return emits[take]                                     # [M, mb, seq, D]
+
+        # 2. Phase A (forward-only streaming, no autodiff possible by construction)
+        if F > 0:
+            outs_A = phase(lax.stop_gradient(my_blocks),
+                           lax.stop_gradient(emb_at0), 0, F)
+            outs_A = lax.stop_gradient(outs_A)
+            h_B = lax.ppermute(outs_A, "stage", fwd_perm)          # stage F-1 -> F
+        else:
+            h_B = emb_at0
+
+        # 3. Phase B (hot 1F1B pipeline; grad => reverse ticks, stops at stage F)
+        outs_B = phase(my_blocks, h_B, F, S_hot)
+
+        # 4. back to the owner; loss on the owner's local labels
+        shift_back = [(i, (i - (n_stages - 1) + owner) % n_stages)
+                      for i in range(n_stages)]
+        finals = lax.ppermute(outs_B, "stage", shift_back)
+        logits = jax.vmap(lambda hh: tfm.head(cfg, shared, hh))(finals)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(lf, my_labels[..., None], axis=-1)[..., 0]
+        is_owner = (s == owner).astype(jnp.float32)
+        loss = jnp.mean(lse - gold) * is_owner
+        return lax.psum(loss, "stage")
+
+    return jax.shard_map(round_fn, mesh=mesh,
+                         in_specs=(P("stage"), P(), P("stage"), P("stage")),
+                         out_specs=P())
+
+
+def make_ring_train_round(cfg: ModelConfig, mesh: Mesh, *, n_stages: int,
+                          owner: int, boundary: int, n_micro: int):
+    """Returns fn(stage_blocks, shared, tokens, labels) ->
+    (loss, (adapter_grads [S,lps,C,...] stage-local, head_grads replicated))."""
+    loss_fn = make_ring_round(cfg, mesh, n_stages=n_stages, owner=owner,
+                              boundary=boundary, n_micro=n_micro)
+
+    def train_round(stage_blocks, shared, tokens, labels):
+        def wrapped(adapters, head_p):
+            blocks2 = {**stage_blocks, "adapter": adapters}
+            shared2 = {**shared, "head": head_p}
+            return loss_fn(blocks2, shared2, tokens, labels)
+
+        loss, grads = jax.value_and_grad(wrapped, argnums=(0, 1))(
+            stage_blocks["adapter"], shared["head"])
+        return loss, grads
+
+    return train_round
+
+
+def pipeline_tick_counts(n_stages: int, n_micro: int, boundary: int, lps: int
+                         ) -> Dict[str, int]:
+    """Analytic tick counts (used by tests and the §Perf log).
+
+    PipeAdapter (boundary 0): fwd M+S-1, bwd M+S-1.
+    RingAda: fwd (M+F-1) + (M+S_hot-1) + 1 hop, bwd M+S_hot-1.
+    """
+    F = boundary // lps
+    S_hot = n_stages - F
+    return {
+        "fwd_ticks": (n_micro + F - 1 if F else 0) + n_micro + S_hot - 1,
+        "bwd_ticks": n_micro + S_hot - 1,
+        "frozen_stages": F,
+        "hot_stages": S_hot,
+    }

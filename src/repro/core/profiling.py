@@ -1,0 +1,84 @@
+"""Per-layer fwd/bwd profiling — fills the simulator's lookup table.
+
+The paper: "We profile the computation time of forward and backward propagation on
+different edge devices by scaling the computational speed ... recorded in a lookup
+table." Same here: one real measurement per block kind on this host, scaled by each
+DeviceProfile.compute_speed.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.simulator import LayerProfile
+from repro.models import params as prm
+from repro.models.blocks import BlockCtx, apply_block
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def profile_layers(cfg: ModelConfig, batch: int, seq: int,
+                   key=None) -> List[LayerProfile]:
+    """Measure one block's fwd and fwd+bwd time; emit a per-layer lookup table."""
+    key = key or jax.random.key(0)
+    kind = cfg.pattern[0][0]
+    defs = prm.block_defs(cfg, kind)
+    p = prm.materialize(defs, key)
+    h = jax.random.normal(key, (batch, seq, cfg.d_model), jnp.bfloat16)
+    pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (batch, seq))
+    ctx = BlockCtx(cfg=cfg, mode="seq", positions=pos, q_chunk=min(seq, 512))
+
+    fwd = jax.jit(lambda pp, hh: apply_block(kind, cfg, pp, hh, ctx, None)[0])
+
+    def loss(hh, ad, pp):
+        out = apply_block(kind, cfg, {**pp, "adapter": ad}, hh, ctx, None)[0]
+        return jnp.sum(out.astype(jnp.float32))
+
+    # backward = dgrad chain through the block (the cotangent every unfrozen
+    # stage must relay along the ring) + adapter wgrad
+    fwdbwd = jax.jit(lambda pp, hh: jax.grad(loss, argnums=(0, 1))(
+        hh, pp["adapter"], pp))
+
+    t_f = _time(fwd, p, h)
+    t_fb = _time(fwdbwd, p, h)
+    t_b = max(t_fb - t_f, 0.3 * t_f)
+
+    dt = jnp.dtype(jnp.bfloat16).itemsize
+    w_mb = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(p)) / 1e6
+    ad_mb = sum(x.size * x.dtype.itemsize
+                for x in jax.tree.leaves(p["adapter"])) / 1e6
+    act_mb = batch * seq * cfg.d_model * dt * 6 / 1e6   # ~residual set per block
+    bnd_mb = batch * seq * cfg.d_model * dt / 1e6
+
+    lp = LayerProfile(fwd_s=t_f, bwd_s=t_b, act_mb=act_mb,
+                      weight_mb=w_mb - ad_mb, adapter_mb=ad_mb,
+                      boundary_mb=bnd_mb)
+    return [lp] * cfg.n_layers
+
+
+def head_times(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, float]:
+    key = jax.random.key(1)
+    out_dim = cfg.out_dim            # e.g. 2 for the paper's SQuAD span head
+    w = jax.random.normal(key, (cfg.d_model, out_dim), jnp.bfloat16) * 0.02
+    h = jax.random.normal(key, (batch, seq, cfg.d_model), jnp.bfloat16)
+    fwd = jax.jit(lambda ww, hh: hh @ ww)
+    g = jax.jit(lambda ww, hh: jax.grad(
+        lambda w2: jnp.sum((hh @ w2).astype(jnp.float32)))(ww))
+    t_f = _time(fwd, w, h)
+    t_b = _time(g, w, h)
+    dt = 2
+    return {"head_fwd_s": t_f, "head_bwd_s": t_b,
+            "head_mb": cfg.d_model * out_dim * dt / 1e6,
+            "embed_mb": cfg.vocab_size * cfg.d_model * dt / 1e6}

@@ -1,0 +1,124 @@
+"""RingAda trainer: round-robin initiators + scheduled unfreezing (Algorithm 1).
+
+Drives the shard_map ring pipeline (core/pipeline.py) across training rounds:
+
+  * the initiator rotates per round (paper: next initiator = best channel quality;
+    under a homogeneous ICI ring this degenerates to round-robin, which is also
+    what the paper's experiments use),
+  * the coordinator-side unfreeze schedule bumps the depth every k steps,
+  * each (owner, boundary) pair compiles once and is cached (staged re-jit),
+  * adapter moments live stage-local (sharded with the adapters — optimizer state
+    never crosses the ring, like the paper), head moments are replicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import pipeline as pl
+from repro.core.unfreeze import UnfreezeSchedule, depth_to_boundary
+
+Array = jax.Array
+
+
+def _adam_update(g, m, v, p, lr, tc: TrainConfig, mask):
+    gf = g.astype(jnp.float32)
+    m2 = jnp.where(mask > 0, tc.beta1 * m + (1 - tc.beta1) * gf, m)
+    v2 = jnp.where(mask > 0, tc.beta2 * v + (1 - tc.beta2) * gf * gf, v)
+    upd = m2 / (jnp.sqrt(v2) + tc.eps) + tc.weight_decay * p.astype(jnp.float32)
+    return m2, v2, (p.astype(jnp.float32) - lr * upd * mask).astype(p.dtype)
+
+
+class RingTrainer:
+    """Collaborative fine-tuning over a ring of ``n_stages`` devices."""
+
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig, mesh: Mesh,
+                 params: Dict[str, Any], n_stages: int, n_micro: int):
+        assert len(cfg.pattern) == 1, "ring trainer needs a uniform pattern"
+        self.cfg, self.tc, self.mesh = cfg, tc, mesh
+        self.S, self.M = n_stages, n_micro
+        self.lps = cfg.repeats // n_stages
+        self.stage_blocks, self.shared = pl.stage_stack(params, cfg, n_stages)
+        self._params_rest = {k: v for k, v in params.items()
+                             if k not in ("blocks",)}
+        zeros = lambda t: jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), t)
+        self.m_ad = zeros(self.stage_blocks["adapter"])
+        self.v_ad = zeros(self.stage_blocks["adapter"])
+        self.m_hd = zeros(self.shared["head"])
+        self.v_hd = zeros(self.shared["head"])
+        self.sched = UnfreezeSchedule.from_train_config(tc)
+        self._round_fns: Dict[Tuple[int, int], Any] = {}
+        self.step = 0
+
+    # ------------------------------------------------------------------
+    def _boundary_at(self, step: int) -> int:
+        depth = self.sched.depth_at(step, self.cfg.n_layers)
+        b = depth_to_boundary(self.cfg, depth)
+        return (b // self.lps) * self.lps          # stage-aligned (terminator device)
+
+    def _fn(self, owner: int, boundary: int):
+        key = (owner, boundary)
+        if key not in self._round_fns:
+            fn = pl.make_ring_train_round(
+                self.cfg, self.mesh, n_stages=self.S, owner=owner,
+                boundary=boundary, n_micro=self.M)
+            self._round_fns[key] = jax.jit(fn)
+        return self._round_fns[key]
+
+    # ------------------------------------------------------------------
+    def round(self, tokens: Array, labels: Array) -> Dict[str, float]:
+        """One training round: every client acts as initiator once (paper §III-B3).
+
+        tokens/labels: [S, M, mb, seq] per-client local data for this round.
+        """
+        losses = []
+        for owner in range(self.S):
+            boundary = self._boundary_at(self.step)
+            loss = self._iteration(owner, boundary, tokens, labels)
+            losses.append(loss)
+            self.step += 1
+        return {"loss": float(jnp.mean(jnp.array(losses))),
+                "boundary": self._boundary_at(self.step - 1),
+                "step": self.step}
+
+    def _iteration(self, owner: int, boundary: int, tokens, labels) -> float:
+        fn = self._fn(owner, boundary)
+        loss, (g_ad, g_hd) = fn(self.stage_blocks, self.shared, tokens, labels)
+
+        lr = self.tc.learning_rate
+        F = boundary // self.lps
+        # stage-row mask: frozen stages' adapters never move
+        def upd_ad(g, m, v, p):
+            stage_ids = jnp.arange(self.S).reshape(
+                (self.S,) + (1,) * (p.ndim - 1))
+            mask = (stage_ids >= F).astype(jnp.float32)
+            return _adam_update(g, m, v, p, lr, self.tc, mask)
+
+        trip = jax.tree.map(upd_ad, g_ad, self.m_ad, self.v_ad,
+                            self.stage_blocks["adapter"])
+        is_t = lambda x: isinstance(x, tuple)
+        self.m_ad = jax.tree.map(lambda t: t[0], trip, is_leaf=is_t)
+        self.v_ad = jax.tree.map(lambda t: t[1], trip, is_leaf=is_t)
+        new_ad = jax.tree.map(lambda t: t[2], trip, is_leaf=is_t)
+        self.stage_blocks = {**self.stage_blocks, "adapter": new_ad}
+
+        trip_h = jax.tree.map(
+            lambda g, m, v, p: _adam_update(g, m, v, p, lr, self.tc,
+                                            jnp.float32(1.0)),
+            g_hd, self.m_hd, self.v_hd, self.shared["head"])
+        self.m_hd = jax.tree.map(lambda t: t[0], trip_h, is_leaf=is_t)
+        self.v_hd = jax.tree.map(lambda t: t[1], trip_h, is_leaf=is_t)
+        self.shared = {**self.shared,
+                       "head": jax.tree.map(lambda t: t[2], trip_h, is_leaf=is_t)}
+        return float(loss)
+
+    # ------------------------------------------------------------------
+    def export_params(self) -> Dict[str, Any]:
+        return pl.unstack(self.stage_blocks, self.cfg, self._params_rest,
+                          self.shared)

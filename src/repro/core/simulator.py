@@ -1,0 +1,227 @@
+"""Trace-based discrete-event simulator — the paper's own evaluation methodology.
+
+The paper evaluates RingAda with a trace-driven simulation: per-layer forward and
+backward times are profiled once (on real hardware, here: real JAX timings on this
+host), stored in a lookup table, scaled by each edge device's relative compute
+speed, and the three schemes are replayed by a discrete-event engine:
+
+  * ``single``       — classic adapter fine-tuning on one device (all adapters hot)
+  * ``pipe_adapter`` — 1F1B pipeline across U devices, all adapters hot, PipeDream-
+                        style weight stashing (multiple in-flight versions)
+  * ``ringada``      — pipeline + scheduled top-down unfreezing: backward early-stops
+                        at the terminator device; devices whose adapters are all
+                        frozen stream forward passes continuously (no 1F1B stall),
+                        single weight version (staleness-free by construction)
+
+Outputs per scheme: wall-clock time per epoch / to convergence, per-device peak
+memory (weights + adapters + optimizer + activation stashes + weight stashes) —
+the quantities of the paper's Table I and Fig. 3(b).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.partition import DeviceProfile, assign_layers, uniform_assignment
+
+
+@dataclass(frozen=True)
+class LayerProfile:
+    """Per-block lookup-table entry (reference device, seconds / MB)."""
+
+    fwd_s: float
+    bwd_s: float                 # dgrad + adapter wgrad when the adapter is hot
+    act_mb: float                # residuals that must be stashed for backward
+    weight_mb: float
+    adapter_mb: float
+    # activation tensor that crosses the device boundary per microbatch
+    boundary_mb: float
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    n_layers: int
+    n_devices: int
+    n_microbatches: int = 8       # in-flight per round
+    head_fwd_s: float = 0.0
+    head_bwd_s: float = 0.0
+    head_mb: float = 0.0
+    embed_mb: float = 0.0
+
+
+@dataclass
+class SimResult:
+    time_per_round_s: float
+    peak_memory_mb: Dict[int, float]     # per device
+    device_busy_s: Dict[int, float]
+    bubbles_s: float
+
+    @property
+    def max_memory_mb(self) -> float:
+        return max(self.peak_memory_mb.values())
+
+
+# ---------------------------------------------------------------------------
+
+
+def _link_time(mb: float, mbps: float) -> float:
+    return mb * 8.0 / mbps
+
+
+def simulate_round(scheme: str, sim: SimConfig, layers: Sequence[LayerProfile],
+                   devices: Sequence[DeviceProfile],
+                   unfreeze_depth: Optional[int] = None,
+                   spans: Optional[List[Tuple[int, int]]] = None) -> SimResult:
+    """Simulate one training round (M microbatches through fwd+bwd)."""
+    L, U, M = sim.n_layers, sim.n_devices, sim.n_microbatches
+    assert len(layers) == L
+
+    if scheme == "single":
+        dev = devices[0]
+        t = 0.0
+        for _ in range(M):
+            t += (sum(l.fwd_s for l in layers) + sim.head_fwd_s
+                  + sim.head_bwd_s + sum(l.bwd_s for l in layers)
+                  ) / dev.compute_speed
+        mem = (sum(l.weight_mb + l.adapter_mb * 4 for l in layers)
+               + sum(l.act_mb for l in layers)           # full activation set
+               + sim.head_mb * 4 + sim.embed_mb)
+        return SimResult(t, {0: mem}, {0: t}, 0.0)
+
+    spans = spans or uniform_assignment(L, U)
+    owner_of = {u: span for u, span in enumerate(spans)}
+    depth = L if scheme == "pipe_adapter" else (unfreeze_depth or L)
+    lowest_hot = L - depth                     # first block with a hot adapter
+    hot_dev = [u for u, (b, e) in enumerate(spans) if e > lowest_hot]
+    terminator = min(hot_dev) if hot_dev else U - 1
+
+    def stage_fwd(u):
+        b, e = spans[u]
+        return sum(layers[i].fwd_s for i in range(b, e)) / devices[u].compute_speed
+
+    def stage_bwd(u):
+        b, e = spans[u]
+        return sum(layers[i].bwd_s for i in range(max(b, lowest_hot), e)
+                   ) / devices[u].compute_speed
+
+    def hop(u):
+        b, e = spans[u]
+        return _link_time(layers[e - 1].boundary_mb, devices[u].link_mbps)
+
+    # Discrete-event list scheduler. Ops: fwd(m, u) and bwd(m, u) with ring
+    # dependencies (+ link hop latencies). 1F1B (PipeDream) on hot devices:
+    # device u keeps at most W_u = U - u microbatches in flight — fwd(m, u)
+    # additionally depends on bwd(m - W_u, u). RingAda's frozen devices carry
+    # no trainable state, so they stream forwards freely (the paper's
+    # "continuously perform the forward pass"): no 1F1B window. Devices pick
+    # the earliest-ready op, backward-first on ties (standard 1F1B priority).
+    dev_free = [0.0] * U
+    busy = [0.0] * U
+    done: Dict[Tuple[str, int, int], float] = {}
+    remaining = []
+    for m in range(M):
+        for u in range(U):
+            remaining.append(("fwd", m, u))
+        for u in range(U - 1, terminator - 1, -1):
+            remaining.append(("bwd", m, u))
+
+    def ready_time(op) -> Optional[float]:
+        kind, m, u = op
+        if kind == "fwd":
+            t = 0.0
+            if u > 0:
+                prev = done.get(("fwd", m, u - 1))
+                if prev is None:
+                    return None
+                t = prev + hop(u - 1)
+            hot = not (scheme == "ringada" and u < terminator)
+            w = U - u
+            if hot and m - w >= 0 and terminator <= u:
+                prevb = done.get(("bwd", m - w, max(u, terminator)))
+                if prevb is None:
+                    return None
+                t = max(t, prevb)
+            return t
+        # backward
+        if u == U - 1:
+            prev = done.get(("fwd", m, U - 1))
+            if prev is None:
+                return None
+            return prev + sim.head_fwd_s + sim.head_bwd_s
+        nxt = done.get(("bwd", m, u + 1))
+        if nxt is None:
+            return None
+        return nxt + hop(u)
+
+    while remaining:
+        # pick the schedulable op with the earliest (ready, dev_free) start;
+        # prefer backward on ties (1F1B drains in-flight work first)
+        best, best_start, best_ready = None, None, None
+        for op in remaining:
+            r = ready_time(op)
+            if r is None:
+                continue
+            start = max(r, dev_free[op[2]])
+            key = (start, 0 if op[0] == "bwd" else 1, op[1])
+            if best is None or key < best_start:
+                best, best_start, best_ready = op, key, r
+        assert best is not None, "dependency deadlock"
+        kind, m, u = best
+        dur = stage_fwd(u) if kind == "fwd" else stage_bwd(u)
+        start = max(best_ready, dev_free[u])
+        end = start + dur
+        dev_free[u] = end
+        busy[u] += dur
+        done[best] = end
+        remaining.remove(best)
+
+    total = max(dev_free)
+    bubbles = total * U - sum(busy)
+
+    # ---- memory model --------------------------------------------------------
+    peak: Dict[int, float] = {}
+    for u, (b, e) in enumerate(spans):
+        w = sum(layers[i].weight_mb for i in range(b, e))
+        ad = sum(layers[i].adapter_mb for i in range(b, e))
+        hot_ad = sum(layers[i].adapter_mb for i in range(max(b, lowest_hot), e))
+        opt = hot_ad * 3                     # fp32 moments + master
+        mem = w + ad + opt + sim.embed_mb + sim.head_mb * 4
+        if scheme == "pipe_adapter":
+            # PipeDream-style: stash activations AND a weight version per
+            # in-flight microbatch (up to U in flight)
+            inflight = min(M, U)
+            mem += inflight * sum(layers[i].act_mb for i in range(b, e))
+            mem += (inflight - 1) * ad        # stale adapter copies
+        elif scheme == "ringada":
+            # staleness-free: one weight version; residuals only for hot blocks,
+            # and only one microbatch's worth (strict 1F1B on hot devices)
+            mem += sum(layers[i].act_mb for i in range(max(b, lowest_hot), e))
+        peak[u] = mem
+
+    return SimResult(total, peak, {u: busy[u] for u in range(U)}, bubbles)
+
+
+# ---------------------------------------------------------------------------
+# Multi-round convergence-style run (paper Fig. 3(b) / Table I)
+# ---------------------------------------------------------------------------
+
+
+def simulate_training(scheme: str, sim: SimConfig,
+                      layers: Sequence[LayerProfile],
+                      devices: Sequence[DeviceProfile], *,
+                      rounds: int, unfreeze_interval: int = 40,
+                      initial_depth: int = 1,
+                      spans: Optional[List[Tuple[int, int]]] = None,
+                      ) -> Tuple[float, float, List[float]]:
+    """Returns (total_time_s, peak_memory_mb, cumulative_time_per_round)."""
+    total, peak, times = 0.0, 0.0, []
+    for r in range(rounds):
+        depth = min(initial_depth + r // unfreeze_interval, sim.n_layers)
+        res = simulate_round(scheme, sim, layers, devices,
+                             unfreeze_depth=depth, spans=spans)
+        total += res.time_per_round_s
+        peak = max(peak, res.max_memory_mb)
+        times.append(total)
+    return total, peak, times

@@ -1,0 +1,69 @@
+"""Scheduled top-down adapter unfreezing (RingAda Algorithm 1, coordinator side).
+
+The schedule starts with only the head + the top-most adapter trainable
+(``d = initial_unfreeze_depth``) and unfreezes one more adapter every
+``unfreeze_interval`` steps (the paper uses k = 40):
+
+    if r mod k == 0:  d <- d + 1
+
+``depth`` counts *unfrozen* blocks from the top; the static scan-split
+``boundary`` used by the model is ``boundary = R - depth_in_repeats`` (frozen
+repeats from the bottom). Because the boundary is a static jit argument, every
+depth change triggers one (cached) recompile — amortized over >= k steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Iterator, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig, TrainConfig
+
+
+@dataclass(frozen=True)
+class UnfreezeSchedule:
+    initial_depth: int = 1
+    interval: int = 40               # k
+    max_depth: Optional[int] = None  # defaults to all blocks
+
+    @staticmethod
+    def from_train_config(tc: TrainConfig) -> "UnfreezeSchedule":
+        return UnfreezeSchedule(initial_depth=tc.initial_unfreeze_depth,
+                                interval=tc.unfreeze_interval,
+                                max_depth=tc.max_unfreeze_depth)
+
+    def depth_at(self, step: int, n_blocks: int) -> int:
+        cap = min(self.max_depth or n_blocks, n_blocks)
+        return min(self.initial_depth + step // self.interval, cap)
+
+
+def depth_to_boundary(cfg: ModelConfig, depth: int) -> int:
+    """Unfrozen-from-top depth (in *blocks*) -> frozen repeats from the bottom.
+
+    Depth is rounded up to whole pattern repeats (a "superblock" for patterned
+    archs like the VLM's [dense x4, cross x1]; a single layer for uniform archs).
+    """
+    per_rep = cfg.layers_per_repeat
+    depth_reps = min(-(-depth // per_rep), cfg.repeats)
+    return cfg.repeats - depth_reps
+
+
+def boundary_schedule(cfg: ModelConfig, sched: UnfreezeSchedule, total_steps: int,
+                      ) -> List[Tuple[int, int, int]]:
+    """[(start_step, end_step, boundary)] segments with constant boundary.
+
+    Driving the training loop off these segments gives exactly one jit cache
+    entry per distinct boundary (the paper's runtime graph surgery, realized as
+    staged recompilation).
+    """
+    n_blocks = cfg.n_layers
+    segs: List[Tuple[int, int, int]] = []
+    start = 0
+    cur = depth_to_boundary(cfg, sched.depth_at(0, n_blocks))
+    for s in range(1, total_steps):
+        b = depth_to_boundary(cfg, sched.depth_at(s, n_blocks))
+        if b != cur:
+            segs.append((start, s, cur))
+            start, cur = s, b
+    segs.append((start, total_steps, cur))
+    return segs

@@ -1,0 +1,123 @@
+"""Data pipeline: per-client tokenized shards (synthetic, deterministic, offline).
+
+RingAda's setting is U clients with private local datasets D_u. The pipeline
+produces deterministic synthetic corpora per client with *client-specific
+distributions* (distinct n-gram transition tables), so collaborative fine-tuning
+across clients is actually measurable (a model fit to one client's distribution
+has higher loss on the others).
+
+Two task flavours:
+  * ``lm``    — next-token prediction (labels = tokens shifted by 1)
+  * ``qa``    — SQuAD-like span extraction for the mBERT config: the "document"
+                contains a marked answer span; labels are (start, end).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class ClientDataset:
+    client_id: int
+    tokens: np.ndarray              # [N, seq] int32
+    labels: np.ndarray              # [N, seq] int32 (lm) or [N, 2] (qa)
+    kind: str = "lm"
+
+    def __len__(self):
+        return self.tokens.shape[0]
+
+
+def _markov_corpus(rng: np.random.Generator, vocab: int, n: int, seq: int,
+                   order_bias: float) -> np.ndarray:
+    """Client-specific bigram process: next ~ (cur * a + b) mod vocab + noise."""
+    a = int(rng.integers(3, 23)) * 2 + 1
+    b = int(rng.integers(1, vocab - 1))
+    toks = np.empty((n, seq), np.int32)
+    cur = rng.integers(0, vocab, size=n)
+    for t in range(seq):
+        toks[:, t] = cur
+        noise = rng.random(n) < order_bias
+        nxt = (cur * a + b) % vocab
+        cur = np.where(noise, rng.integers(0, vocab, size=n), nxt)
+    return toks
+
+
+def make_client_datasets(n_clients: int, *, vocab: int, n_per_client: int,
+                         seq: int, seed: int = 0, kind: str = "lm",
+                         ) -> List[ClientDataset]:
+    out = []
+    for u in range(n_clients):
+        rng = np.random.default_rng(seed * 1000 + u)
+        toks = _markov_corpus(rng, vocab, n_per_client, seq + 1, 0.15)
+        if kind == "lm":
+            ds = ClientDataset(u, toks[:, :-1].astype(np.int32),
+                               toks[:, 1:].astype(np.int32), "lm")
+        elif kind == "qa":
+            # answer span marked by sentinel tokens; labels = span indices
+            toks2 = toks[:, :seq].copy()
+            starts = rng.integers(1, seq - 8, size=n_per_client)
+            lens = rng.integers(1, 6, size=n_per_client)
+            ends = np.minimum(starts + lens, seq - 2)
+            sent = vocab - 1
+            for i in range(n_per_client):
+                toks2[i, starts[i] - 1] = sent       # answer-begin marker
+                toks2[i, ends[i] + 1] = sent - 1     # answer-end marker
+            ds = ClientDataset(u, toks2.astype(np.int32),
+                               np.stack([starts, ends], -1).astype(np.int32),
+                               "qa")
+        else:
+            raise ValueError(kind)
+        out.append(ds)
+    return out
+
+
+class RingBatcher:
+    """Yields [S, M, mb, seq] stacked per-client microbatches for ring rounds."""
+
+    def __init__(self, datasets: List[ClientDataset], n_micro: int,
+                 micro_batch: int, seed: int = 0):
+        self.ds = datasets
+        self.M, self.mb = n_micro, micro_batch
+        self.rng = np.random.default_rng(seed)
+
+    def next(self) -> Tuple[Array, Array]:
+        toks, labs = [], []
+        for d in self.ds:
+            idx = self.rng.integers(0, len(d), size=self.M * self.mb)
+            toks.append(d.tokens[idx].reshape(self.M, self.mb, -1))
+            labs.append(d.labels[idx].reshape(self.M, self.mb, -1))
+        return (jnp.asarray(np.stack(toks)), jnp.asarray(np.stack(labs)))
+
+
+class Batcher:
+    """Flat [B, seq] batches for the single-device / pjit paths."""
+
+    def __init__(self, dataset: ClientDataset, batch: int, seed: int = 0):
+        self.d, self.B = dataset, batch
+        self.rng = np.random.default_rng(seed)
+
+    def next(self) -> Dict[str, Array]:
+        idx = self.rng.integers(0, len(self.d), size=self.B)
+        out = {"tokens": jnp.asarray(self.d.tokens[idx])}
+        if self.d.kind == "lm":
+            out["labels"] = jnp.asarray(self.d.labels[idx])
+        else:
+            lab = self.d.labels[idx]
+            out["starts"] = jnp.asarray(lab[:, 0])
+            out["ends"] = jnp.asarray(lab[:, 1])
+        return out
+
+
+def merged(datasets: List[ClientDataset]) -> ClientDataset:
+    return ClientDataset(-1,
+                         np.concatenate([d.tokens for d in datasets]),
+                         np.concatenate([d.labels for d in datasets]),
+                         datasets[0].kind)

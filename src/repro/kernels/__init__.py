@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships three pieces:
+  <name>.py  — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py     — jit'd public wrappers (interpret=True on CPU, Mosaic on TPU)
+  ref.py     — pure-jnp oracles (the allclose ground truth in tests)
+
+Kernels: adapter_fused (the paper's eq. (1) as one VMEM pass), rwkv_scan
+(RWKV-6 chunked wkv), flash_attention (GQA/window-aware online softmax),
+mamba_scan (chunked selective SSM).
+"""

@@ -1,0 +1,105 @@
+"""Flash attention (forward) as a Pallas TPU kernel, GQA- and window-aware.
+
+The GPU flash algorithm is a warp-level streaming softmax; the TPU re-think keeps
+the same online-softmax math but tiles for the MXU: [bq x hd] @ [hd x bk] score
+tiles, fp32 accumulators (m, l, acc) in VMEM scratch persisting across the
+sequential k-block grid dimension, and GQA expressed through the k/v BlockSpec
+index_map (``h // group``) so grouped heads never materialize repeated K/V in HBM.
+Sliding windows mask per-tile; fully-masked tiles still execute (structural
+simplification — skipping them via a shortened k-grid is a recorded beyond-paper
+optimization opportunity, see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window, bq: int, bk: int,
+            n_kb: int, seq_q: int, seq_k: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                    # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)                    # [bk, hd]
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + (seq_k - seq_q)                                # align ends
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                  # [bq, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...], l_scr[...], acc_scr[...] = m_new, l_new, acc
+
+    @pl.when(ik == n_kb - 1)
+    def _fin():
+        o_ref[0] = (acc / jnp.maximum(l_new, 1e-20)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    group: int = 1, causal: bool = True,
+                    window: int | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """q [Nq, Sq, hd]; k,v [Nk, Sk, hd] with Nq == Nk * group (GQA).
+
+    Returns [Nq, Sq, hd]. Softmax in fp32, online (flash) accumulation.
+    """
+    Nq, Sq, hd = q.shape
+    Nk, Sk, _ = k.shape
+    assert Nq == Nk * group, (Nq, Nk, group)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    n_qb, n_kb = Sq // bq, Sk // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          bq=bq, bk=bk, n_kb=n_kb, seq_q=Sq, seq_k=Sk),
+        grid=(Nq, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda n, iq, ik: (n, iq, 0)),
+            pl.BlockSpec((1, bk, hd),
+                         lambda n, iq, ik, group=group: (n // group, ik, 0)),
+            pl.BlockSpec((1, bk, hd),
+                         lambda n, iq, ik, group=group: (n // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda n, iq, ik: (n, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((Nq, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

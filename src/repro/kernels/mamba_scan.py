@@ -1,0 +1,94 @@
+"""Chunked selective-SSM (Mamba) scan as a Pallas TPU kernel — Hymba's SSM half.
+
+The GPU reference implementation (mamba's CUDA selective_scan) parallelizes over
+channels with one thread per channel stepping time serially. TPU re-think: within
+a chunk of length L the recurrence
+
+    s_t = a_t * s_{t-1} + b_t        (elementwise over [d_inner, N])
+    y_t = <s_t, c_t>                 (contraction over N)
+
+factorizes with cumulative products  A_t = prod_{u<=t} a_u  (computed in log space
+in VMEM) as  s_t = A_t * (s_0 + sum_{u<=t} b_u / A_u),  so a chunk becomes two
+cumulative ops + one [L, N] contraction — VPU-friendly elementwise work with the
+running state held in VMEM scratch across the sequential chunk grid dimension,
+HBM touched once per token.
+
+Numerics: a_t = exp(dt_t * A) in (0, 1]; cumprods underflow for long chunks, so
+the kernel computes  s_t = A_t s_0 + sum_u exp(log A_t - log A_u) b_u  with all
+exponents <= 0 via the pairwise [L, L] decay matrix per channel block (same safe
+pattern as the RWKV-6 kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(la_ref, b_ref, c_ref, out_ref, sT_ref, state, *, n_chunks: int):
+    ch = pl.program_id(1)
+
+    @pl.when(ch == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    la = la_ref[0]                       # [L, D, N] log a_t  (<= 0)
+    b = b_ref[0]                         # [L, D, N]
+    c = c_ref[0]                         # [L, N]
+    s0 = state[...]                      # [D, N]
+
+    cum = jnp.cumsum(la, axis=0)         # log A_t (inclusive)
+    L = la.shape[0]
+    # pairwise decay exp(cum_t - cum_u) for u <= t  (exponents <= 0: safe)
+    diff = cum[:, None] - cum[None, :]                     # [L, L, D, N]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (L, L), 1))
+    P = jnp.where(tri[:, :, None, None], jnp.exp(diff), 0.0)
+    inner = jnp.einsum("tudn,udn->tdn", P, b)              # sum_u<=t decay * b_u
+    states = jnp.exp(cum) * s0[None] + inner               # [L, D, N]
+    out_ref[0] = jnp.einsum("tdn,tn->td", states, c)
+    state[...] = states[-1]
+
+    @pl.when(ch == n_chunks - 1)
+    def _fin():
+        sT_ref[0] = states[-1]
+
+
+def mamba_scan(log_a: jax.Array, b: jax.Array, c: jax.Array, *,
+               chunk: int = 16, interpret: bool = True):
+    """log_a, b: [B, S, D, N] (log decay <= 0, input); c: [B, S, N].
+
+    Returns (y [B, S, D], state [B, D, N]). Grid (B, S/chunk) with the chunk
+    dimension sequential; running state in VMEM scratch.
+    """
+    B, S, D, N = log_a.shape
+    if S % chunk != 0:
+        for c2 in range(min(chunk, S), 0, -1):
+            if S % c2 == 0:
+                chunk = c2
+                break
+    n_chunks = S // chunk
+
+    tile4 = lambda: pl.BlockSpec((1, chunk, D, N), lambda i, j: (i, j, 0, 0))
+    y, sT = pl.pallas_call(
+        functools.partial(_kernel, n_chunks=n_chunks),
+        grid=(B, n_chunks),
+        in_specs=[
+            tile4(), tile4(),
+            pl.BlockSpec((1, chunk, N), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, D), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, D, N), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, D, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, N), jnp.float32)],
+        interpret=interpret,
+    )(log_a, b, c)
+    return y, sT

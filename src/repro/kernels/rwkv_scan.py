@@ -1,0 +1,106 @@
+"""Chunked RWKV-6 wkv recurrence as a Pallas TPU kernel.
+
+GPU RWKV kernels (the official CUDA wkv6) assign one thread per channel and step
+time serially with the state in registers. The TPU-native re-think: the recurrence
+factorizes into per-chunk *matmuls* (MXU work) plus an O(S/L) state hand-off —
+
+  out_t = (r_t o e^{ca_{t-1}}) S_0 + sum_{s<t} (r_t o e^{ca_{t-1}-ca_s}) k_s v_s^T
+          + (r_t o u o k_t) v_t
+  S_L   = e^{ca_L} o S_0 + sum_s (k_s o e^{ca_L - ca_s}) v_s^T
+
+with ca = cumsum(log w) held in VMEM, all exponents <= 0 (no overflow), and the
+[L, L] pairwise-decay attention-like matrix built per chunk in VMEM. The grid is
+(heads, chunks) with the chunk dimension sequential; the running state lives in a
+VMEM scratch accumulator across grid steps — HBM sees each token exactly once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, out_ref, sT_ref,
+            state, *, n_chunks: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state[...] = s0_ref[0]
+
+    r = r_ref[0]                       # [L, hd] fp32
+    k = k_ref[0]
+    v = v_ref[0]
+    lw = lw_ref[0]
+    u = u_ref[0]                       # [1, hd]
+    s0 = state[...]                    # [hd, hd]
+
+    ca = jnp.cumsum(lw, axis=0)        # inclusive log-decay prefix
+    ca_prev = ca - lw
+
+    inter = jax.lax.dot(r * jnp.exp(ca_prev), s0,
+                        preferred_element_type=jnp.float32)
+    L = r.shape[0]
+    diff = ca_prev[:, None, :] - ca[None, :, :]            # [L, L, hd]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+           > jax.lax.broadcasted_iota(jnp.int32, (L, L), 1))
+    P = jnp.where(tri[:, :, None], jnp.exp(diff), 0.0)
+    A = jnp.einsum("tk,tsk,sk->ts", r, P, k,
+                   preferred_element_type=jnp.float32)
+    intra = jax.lax.dot(A, v, preferred_element_type=jnp.float32)
+    diag = jnp.sum(r * u * k, axis=-1, keepdims=True) * v
+    out_ref[0] = inter + intra + diag
+
+    decay_all = jnp.exp(ca[-1])                            # [hd]
+    carry_k = k * jnp.exp(ca[-1][None, :] - ca)
+    new_state = decay_all[:, None] * s0 + jax.lax.dot(
+        carry_k.T, v, preferred_element_type=jnp.float32)
+    state[...] = new_state
+
+    @pl.when(c == n_chunks - 1)
+    def _fin():
+        sT_ref[0] = new_state
+
+
+def rwkv_scan(r: jax.Array, k: jax.Array, v: jax.Array, lw: jax.Array,
+              u: jax.Array, state0: jax.Array, *, chunk: int = 32,
+              interpret: bool = True):
+    """r,k,v,lw [N, S, hd] fp32; u [N, 1, hd]; state0 [N, hd, hd].
+
+    Returns (out [N, S, hd], state [N, hd, hd]).
+    """
+    N, S, hd = r.shape
+    if S % chunk != 0:
+        for c2 in range(min(chunk, S), 0, -1):
+            if S % c2 == 0:
+                chunk = c2
+                break
+    n_chunks = S // chunk
+
+    grid = (N, n_chunks)
+    tile = lambda: pl.BlockSpec((1, chunk, hd), lambda n, c: (n, c, 0))
+    out, sT = pl.pallas_call(
+        functools.partial(_kernel, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            tile(), tile(), tile(), tile(),
+            pl.BlockSpec((1, 1, hd), lambda n, c: (n, 0, 0)),
+            pl.BlockSpec((1, hd, hd), lambda n, c: (n, 0, 0)),
+        ],
+        out_specs=[
+            tile(),
+            pl.BlockSpec((1, hd, hd), lambda n, c: (n, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, S, hd), jnp.float32),
+            jax.ShapeDtypeStruct((N, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, lw, u, state0)
+    return out, sT

@@ -1,0 +1,128 @@
+"""Abstract input specs for every (architecture x input-shape) combination.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every model
+input (weak-type-correct, shardable, no device allocation) plus the matching
+PartitionSpecs for the production mesh — consumed by the dry-run and roofline.
+
+Stubbed frontends (the one allowed carve-out): for ``vlm`` / ``audio`` archs the
+``memory`` input carries pre-computed patch / frame embeddings ``[B, T_f, d_model]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import sharding as sh
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import kvcache
+from repro.models import params as prm
+
+
+def batch_rules(mesh: Mesh, global_batch: int) -> Dict[str, Any]:
+    """Mesh rules with the batch axis disabled when it cannot shard evenly —
+    B=1 long-context decode replicates batch and gives 'data' to the KV window."""
+    rules = sh.default_rules(mesh)
+    n_data = sh.data_axis_size(mesh)
+    if global_batch % n_data != 0:
+        rules = {**rules, "batch": None}
+    return rules
+
+
+def train_inputs(cfg: ModelConfig, shape: InputShape, mesh: Mesh
+                 ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """(abstract batch, batch partition specs) for a train step."""
+    rules = batch_rules(mesh, shape.global_batch)
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, S), i32),
+        "labels": jax.ShapeDtypeStruct((B, S), i32),
+    }
+    specs = {
+        "tokens": sh.spec_for(("batch", None), rules, (B, S)),
+        "labels": sh.spec_for(("batch", None), rules, (B, S)),
+    }
+    if cfg.frontend is not None or cfg.enc_dec:
+        Tf = cfg.n_frontend_tokens
+        batch["memory"] = jax.ShapeDtypeStruct((B, Tf, cfg.d_model), jnp.bfloat16)
+        specs["memory"] = sh.spec_for(("batch", None, None), rules,
+                                      (B, Tf, cfg.d_model))
+    return batch, specs
+
+
+def prefill_inputs(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    rules = batch_rules(mesh, shape.global_batch)
+    B, S = shape.global_batch, shape.seq_len
+    inputs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    specs = {"tokens": sh.spec_for(("batch", None), rules, (B, S))}
+    if cfg.frontend is not None or cfg.enc_dec:
+        Tf = cfg.n_frontend_tokens
+        inputs["memory"] = jax.ShapeDtypeStruct((B, Tf, cfg.d_model), jnp.bfloat16)
+        specs["memory"] = sh.spec_for(("batch", None, None), rules,
+                                      (B, Tf, cfg.d_model))
+    return inputs, specs
+
+
+def prefill_out_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    """(logits, cache) output shardings — without these the freshly-built KV
+    cache replicates per chip (64 GiB/chip at vision-11B prefill_32k scale)."""
+    rules = batch_rules(mesh, shape.global_batch)
+    B, S = shape.global_batch, shape.seq_len
+    mem_len = cfg.n_frontend_tokens if (cfg.frontend or cfg.enc_dec) else 0
+    cspecs = kvcache.cache_specs(cfg, B, S, rules, mem_len=mem_len)
+    lspec = sh.spec_for(("batch", "vocab"), rules, (B, cfg.out_dim))
+    return lspec, cspecs
+
+
+def decode_inputs(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    """token + KV/state cache sized for a ``seq_len`` decode horizon."""
+    rules = batch_rules(mesh, shape.global_batch)
+    B, S = shape.global_batch, shape.seq_len
+    mem_len = cfg.n_frontend_tokens if (cfg.frontend or cfg.enc_dec) else 0
+    cache = kvcache.abstract_cache(cfg, B, S, mem_len=mem_len)
+    cache_specs = kvcache.cache_specs(cfg, B, S, rules, mem_len=mem_len)
+    inputs = {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32), "cache": cache}
+    specs = {"token": sh.spec_for(("batch", None), rules, (B, 1)),
+             "cache": cache_specs}
+    return inputs, specs
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh) -> Any:
+    return prm.specs(prm.param_defs(cfg), sh.default_rules(mesh))
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    return prm.abstract(prm.param_defs(cfg), cfg.dtype)
+
+
+def trainable_specs(cfg: ModelConfig, mesh: Mesh) -> Any:
+    """Specs for the trainable tree {adapters: tuple, head: ...} (full, b=0)."""
+    ps = param_specs(cfg, mesh)
+    return {"adapters": tuple(e["adapter"] for e in ps["blocks"]),
+            "head": ps["head"]}
+
+
+def abstract_opt_state(cfg: ModelConfig) -> Any:
+    ap = abstract_params(cfg)
+    tr = {"adapters": tuple(e["adapter"] for e in ap["blocks"]),
+          "head": ap["head"]}
+    f32 = lambda t: jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t)
+    return {"m": f32(tr), "v": f32(tr),
+            "count": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def opt_state_specs(cfg: ModelConfig, mesh: Mesh) -> Any:
+    tr = trainable_specs(cfg, mesh)
+    return {"m": tr, "v": tr, "count": P()}
+
+
+def act_spec(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> P:
+    """Residual-stream constraint: [batch, seq, d_model-> model axis]."""
+    rules = batch_rules(mesh, shape.global_batch)
+    return sh.spec_for(("batch", None, "act_embed"), rules,
+                       (shape.global_batch, shape.seq_len, cfg.d_model))

@@ -1,0 +1,30 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: (data=16, model=16) = 256 chips; multi-pod adds pod=2 => 512."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_ring_mesh(n_stages: int) -> Mesh:
+    """Ring-pipeline mesh over the 'stage' axis (CPU demos / tests)."""
+    return jax.make_mesh((n_stages,), ("stage",), axis_types=(AxisType.Auto,))
+
+
+def require_devices(n: int) -> None:
+    have = len(jax.devices())
+    if have < n:
+        raise RuntimeError(
+            f"need {n} devices, have {have}. Set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} BEFORE "
+            f"importing jax (dryrun.py does this automatically).")

@@ -1,0 +1,138 @@
+"""KV / recurrent-state caches for serving.
+
+Cache layout (one entry per layer-pattern position, stacked ``[repeats, count, ...]``):
+
+  dense / moe : {"k": [R,C,B,Ck,K,hd], "v": ...}
+  cross       : dense + {"xk": [R,C,B,Tm,K,hd], "xv": ...}
+  rwkv        : {"state": [R,C,B,H,hd,hd] f32, "px_tm": [R,C,B,D], "px_cm": [R,C,B,D]}
+  hymba       : dense + {"ssm": [R,C,B,di,N] f32, "conv": [R,C,B,W-1,di]}
+
+plus top-level bookkeeping shared by all layers:
+
+  {"pos": [B, Ck] int32   (absolute position held in each slot, -1 = empty),
+   "next": [B] int32      (number of tokens generated so far)}
+
+Sliding-window archs keep a ring buffer of ``n_sink + window`` slots (sink slots are
+never evicted — Hymba meta tokens act as attention sinks); full-attention archs keep
+``seq_len`` slots. RWKV caches O(1) state only.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro import sharding as sh
+
+Array = jax.Array
+
+
+def n_sink(cfg: ModelConfig) -> int:
+    return 128 if any(k == "hymba" for k, _ in cfg.pattern) else 0
+
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Number of KV slots required to decode at position ``seq_len``."""
+    if cfg.sliding_window is not None:
+        return min(seq_len, n_sink(cfg) + cfg.sliding_window)
+    return seq_len
+
+
+def write_slot(cfg: ModelConfig, pos: Array, seq_len: int) -> Array:
+    """Ring-buffer slot for absolute position ``pos`` (any int array)."""
+    ck = cache_len(cfg, seq_len)
+    ns = n_sink(cfg)
+    if cfg.sliding_window is None or ck == seq_len:
+        return pos
+    w = ck - ns
+    return jnp.where(pos < ns, pos, ns + (pos - ns) % w)
+
+
+# ---------------------------------------------------------------------------
+# Structure builders
+# ---------------------------------------------------------------------------
+
+
+def _entry_struct(cfg: ModelConfig, kind: str, batch: int, ck: int,
+                  mem_len: int, dtype) -> Dict[str, Tuple[Tuple[int, ...], Any]]:
+    """(shape, dtype, logical axes) per leaf for one layer (unstacked)."""
+    K, hd, D = cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    kv_dt = jnp.int8 if cfg.kv_quant else dtype
+    kv = lambda: (((batch, ck, K, hd), kv_dt, ("batch", "kv_seq", "kv_heads", None)))
+    scale = lambda: (((batch, ck, K, 1), dtype, ("batch", "kv_seq", "kv_heads", None)))
+    out: Dict[str, Any] = {}
+    if kind in ("dense", "moe", "cross", "hymba"):
+        out["k"] = kv()
+        out["v"] = kv()
+        if cfg.kv_quant:
+            out["k_s"] = scale()
+            out["v_s"] = scale()
+    if kind == "cross":
+        out["xk"] = ((batch, mem_len, K, hd), dtype,
+                     ("batch", "frontend_seq", "kv_heads", None))
+        out["xv"] = ((batch, mem_len, K, hd), dtype,
+                     ("batch", "frontend_seq", "kv_heads", None))
+    if kind == "rwkv":
+        H = D // cfg.ssm.head_dim
+        rhd = cfg.ssm.head_dim
+        out["state"] = ((batch, H, rhd, rhd), jnp.float32,
+                        ("batch", "heads", None, None))
+        out["px_tm"] = ((batch, D), dtype, ("batch", "act_embed"))
+        out["px_cm"] = ((batch, D), dtype, ("batch", "act_embed"))
+    if kind == "hymba":
+        di = cfg.n_heads * cfg.head_dim
+        N = cfg.ssm.state_size
+        W = cfg.ssm.conv_width
+        out["ssm"] = ((batch, di, N), jnp.float32, ("batch", "heads", None))
+        out["conv"] = ((batch, W - 1, di), dtype, ("batch", None, "heads"))
+    return out
+
+
+def _build(cfg: ModelConfig, batch: int, seq_len: int, mem_len: int,
+           dtype, make_leaf) -> Dict[str, Any]:
+    ck = cache_len(cfg, seq_len)
+    layers = []
+    for kind, count in cfg.pattern:
+        entry = {}
+        for name, (shape, dt, logical) in _entry_struct(
+                cfg, kind, batch, ck, mem_len, dtype).items():
+            entry[name] = make_leaf((cfg.repeats, count) + shape, dt,
+                                    ("layers", "layers") + logical)
+        layers.append(entry)
+    cache = {
+        "layers": tuple(layers),
+        "pos": make_leaf((batch, ck), jnp.int32, ("batch", "kv_seq")),
+        "next": make_leaf((batch,), jnp.int32, ("batch",)),
+    }
+    return cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
+               mem_len: int = 0, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    def leaf(shape, dt, logical):
+        if dt == jnp.int32:
+            return -jnp.ones(shape, dt) if len(shape) == 2 else jnp.zeros(shape, dt)
+        return jnp.zeros(shape, dt)
+
+    c = _build(cfg, batch, seq_len, mem_len, dtype, leaf)
+    c["next"] = jnp.zeros((batch,), jnp.int32)
+    return c
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
+                   mem_len: int = 0, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    return _build(cfg, batch, seq_len, mem_len, dtype,
+                  lambda shape, dt, logical: jax.ShapeDtypeStruct(shape, dt))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int, rules,
+                *, mem_len: int = 0, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    return _build(cfg, batch, seq_len, mem_len, dtype,
+                  lambda shape, dt, logical: sh.spec_for(logical, rules, shape))
+
+
+def cache_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))

@@ -1,0 +1,117 @@
+"""PEFT-masked AdamW.
+
+Optimizer state exists only for the paper's trainable set (adapters + head) — this
+is the memory advantage RingAda inherits from adapter fine-tuning: for a 7B backbone
+the moments cover ~2% of parameters.
+
+Moments for the adapter stacks are kept *full-size* ``[R, ...]`` so the optimizer
+state pytree is stable while the unfreeze boundary moves; rows below the boundary are
+frozen with a static row mask (their gradients are exactly zero anyway, but the mask
+also stops weight decay and moment decay from touching them — the paper updates only
+unfrozen adapters).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+Array = jax.Array
+
+
+def lr_at(tc: TrainConfig, step: Array) -> Array:
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(tc.warmup_steps, 1))
+    return tc.learning_rate * warm
+
+
+def init(trainable_full: Any) -> Dict[str, Any]:
+    """trainable_full: the *full* (boundary=0) trainable tree."""
+    zeros = lambda t: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {"m": zeros(trainable_full), "v": zeros(trainable_full),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def _pad_adapters(grads_sliced: Any, boundary: int) -> Any:
+    """Pad per-entry adapter grads [R-b, ...] back to [R, ...] with zero rows."""
+    def pad(x):
+        if boundary == 0:
+            return x
+        z = jnp.zeros((boundary,) + x.shape[1:], x.dtype)
+        return jnp.concatenate([z, x], axis=0)
+
+    return jax.tree.map(pad, grads_sliced)
+
+
+def update(grads: Dict[str, Any], opt_state: Dict[str, Any],
+           trainable_full: Dict[str, Any], tc: TrainConfig, boundary: int,
+           ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """One AdamW step.
+
+    grads: {"adapters": tuple of sliced [R-b,...] trees, "head": ...}
+    trainable_full / opt_state moments: full-size trees.
+    Returns (new_trainable_full, new_opt_state).
+    """
+    g_full = {"adapters": tuple(_pad_adapters(g, boundary)
+                                for g in grads["adapters"]),
+              "head": grads["head"]}
+
+    count = opt_state["count"] + 1
+    b1, b2, eps = tc.beta1, tc.beta2, tc.eps
+    lr = lr_at(tc, count)
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    def row_mask(x):
+        if boundary == 0:
+            return jnp.ones((1,) * x.ndim, jnp.float32)
+        mask = (jnp.arange(x.shape[0]) >= boundary).astype(jnp.float32)
+        return mask.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
+
+    def leaf(path_is_adapter):
+        def f(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            mask = row_mask(g) if path_is_adapter else jnp.float32(1.0)
+            m2 = jnp.where(mask > 0, b1 * m + (1 - b1) * gf, m)
+            v2 = jnp.where(mask > 0, b2 * v + (1 - b2) * gf * gf, v)
+            upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+            upd = upd + tc.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * upd * mask
+            return m2, v2, new_p.astype(p.dtype)
+        return f
+
+    new_state: Dict[str, Any] = {"count": count}
+    new_trainable: Dict[str, Any] = {}
+
+    # adapters (per pattern entry)
+    fa = leaf(True)
+    m_out, v_out, p_out = [], [], []
+    for gi, mi, vi, pi in zip(g_full["adapters"], opt_state["m"]["adapters"],
+                              opt_state["v"]["adapters"],
+                              trainable_full["adapters"]):
+        trip = jax.tree.map(fa, gi, mi, vi, pi)
+        m_out.append(jax.tree.map(lambda t: t[0], trip, is_leaf=lambda x: isinstance(x, tuple)))
+        v_out.append(jax.tree.map(lambda t: t[1], trip, is_leaf=lambda x: isinstance(x, tuple)))
+        p_out.append(jax.tree.map(lambda t: t[2], trip, is_leaf=lambda x: isinstance(x, tuple)))
+    # head
+    fh = leaf(False)
+    trip_h = jax.tree.map(fh, g_full["head"], opt_state["m"]["head"],
+                          opt_state["v"]["head"], trainable_full["head"])
+    is_t = lambda x: isinstance(x, tuple)
+    new_state["m"] = {"adapters": tuple(m_out),
+                      "head": jax.tree.map(lambda t: t[0], trip_h, is_leaf=is_t)}
+    new_state["v"] = {"adapters": tuple(v_out),
+                      "head": jax.tree.map(lambda t: t[1], trip_h, is_leaf=is_t)}
+    new_trainable = {"adapters": tuple(p_out),
+                     "head": jax.tree.map(lambda t: t[2], trip_h, is_leaf=is_t)}
+    return new_trainable, new_state
+
+
+def opt_state_bytes(opt_state) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(opt_state))

@@ -1,0 +1,302 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / peak_FLOPs_per_chip
+    memory term     = HLO_bytes / HBM_bw_per_chip
+    collective term = collective_bytes_per_chip / ICI_link_bw
+
+Sources: ``compiled.cost_analysis()`` (XLA reports *per-device* flops/bytes for an
+SPMD module) and the optimized HLO text for collective operand bytes —
+``all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute``,
+each multiplied by the trip count of any enclosing while loop (collectives inside
+a scan run once per iteration).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Known XLA-CPU cost-model quirk (documented in EXPERIMENTS.md): when a program
+contains several structurally-similar while loops (the RingAda split-scan train
+step), ``cost_analysis`` attributes full-depth trip counts to each loop. Baseline
+dry-runs use single-scan programs (boundary=0 / serve steps) which are unaffected;
+``analytic_flops`` is reported alongside for cross-checking.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.configs.base import InputShape, ModelConfig
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes of every collective op, x enclosing-loop trip counts."""
+    # 1. map computation name -> body text, find while trip counts
+    comp_of_line: List[Tuple[str, str]] = []
+    cur = "__entry__"
+    trip: Dict[str, float] = {}
+    calls: List[Tuple[str, str, float]] = []   # (parent_comp, body_comp, trips)
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->", ls)
+        if m and ls.endswith("{"):
+            cur = m.group(1)
+            continue
+        if " while(" in ls or ls.startswith("while("):
+            bm = re.search(r"body=%?([\w.\-]+)", ls)
+            tm = re.search(r'known_trip_count[^\d]*(\d+)', ls)
+            if bm:
+                calls.append((cur, bm.group(1), float(tm.group(1)) if tm else 1.0))
+        cm = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", ls)
+        if cm:
+            calls.append((cur, cm.group(1), 1.0))
+        comp_of_line.append((cur, ls))
+
+    # multiplier per computation (product of trip counts down the call chain)
+    mult: Dict[str, float] = {"__entry__": 1.0}
+    # entry computation: the one annotated ENTRY
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+    if entry:
+        mult[entry] = 1.0
+    changed = True
+    it = 0
+    while changed and it < 50:
+        changed, it = False, it + 1
+        for parent, body, t in calls:
+            pm = mult.get(parent)
+            if pm is None:
+                continue
+            new = pm * t
+            if mult.get(body, 0) < new:
+                mult[body] = new
+                changed = True
+
+    out = {k: 0.0 for k in _COLLECTIVES}
+    out["total"] = 0.0
+    for comp, ls in comp_of_line:
+        for kind in _COLLECTIVES:
+            if re.search(rf"\b{kind}(-start|-done)?\(", ls) and "=" in ls:
+                if f"{kind}-done" in ls:
+                    continue   # counted at -start
+                # operand shapes: everything after the op name's '('
+                try:
+                    rhs = ls.split(f"{kind}", 1)[1]
+                except IndexError:
+                    continue
+                shapes = _SHAPE_RE.findall(rhs)
+                nbytes = sum(_shape_bytes(d, s) for d, s in shapes)
+                m = mult.get(comp, 1.0)
+                out[kind] += nbytes * m
+                out["total"] += nbytes * m
+                break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOPs (cross-check for the XLA cost model; also gives MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+
+def _block_fwd_flops_per_token(cfg: ModelConfig, kind: str, ctx_len: float,
+                               mem_len: int = 0) -> float:
+    """Forward FLOPs per token for one block of ``kind``.
+
+    ctx_len: average attended context length (S/2 causal, window for SWA,
+    cache length for decode).
+    """
+    D, H, K, hd, F = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                      cfg.d_ff)
+    m = cfg.adapter.bottleneck
+    f = 4.0 * D * m                                   # the serial adapter
+    ffn = (6.0 if cfg.glu else 4.0) * D * F
+    if kind in ("dense", "moe", "cross", "hymba"):
+        f += 2.0 * D * (H + 2 * K) * hd + 2.0 * D * H * hd   # qkvo proj
+        f += 4.0 * H * hd * ctx_len                          # scores + AV
+    if kind in ("dense", "cross"):
+        f += ffn
+    if kind == "cross":
+        f += 2.0 * D * H * hd + 2.0 * D * H * hd             # q + out proj
+        f += 4.0 * H * hd * mem_len                          # attend memory
+        # memory kv projections amortize over the sequence; count per token
+        f += 4.0 * D * K * hd
+    if kind == "moe":
+        mo = cfg.moe
+        f += 2.0 * D * mo.n_experts                          # router
+        f += mo.top_k * (6.0 * D * mo.d_expert) * mo.capacity_factor
+        f += 6.0 * D * F                                     # shared expert
+    if kind == "hymba":
+        di = H * hd
+        N = cfg.ssm.state_size
+        f += 2.0 * D * di + 2.0 * cfg.ssm.conv_width * di
+        f += 2.0 * di * (cfg.ssm.dt_rank + 2 * N) + 2.0 * cfg.ssm.dt_rank * di
+        f += 6.0 * di * N                                    # state update + C
+        f += ffn
+    if kind == "rwkv":
+        f += 6.0 * 2.0 * D * D                               # r,k,v,g,o,r_c
+        f += 2.0 * D * cfg.ssm.decay_lora * 2                # decay lora
+        f += 4.0 * D * cfg.ssm.head_dim                      # wkv state math
+        f += 4.0 * D * F                                     # channel mix
+    return f
+
+
+def analytic_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """Whole-program FLOPs (global, all chips) for the baseline step.
+
+    train:   fwd + remat re-fwd + dgrad (~fwd) over all layers  (~3x fwd)
+             + adapter/head wgrads (small, counted)
+    prefill: fwd
+    decode:  fwd at ctx = cache length, tokens = B
+    """
+    S = shape.seq_len
+    B = shape.global_batch
+    from repro.models import kvcache
+
+    if shape.kind == "decode":
+        tokens = float(B)
+        ctx = kvcache.cache_len(cfg, S)
+    else:
+        tokens = float(B) * S
+        ctx = min(S, cfg.sliding_window) if cfg.sliding_window else S / 2.0
+
+    mem_len = cfg.n_frontend_tokens
+    per_tok = sum(_block_fwd_flops_per_token(cfg, kind, ctx, mem_len) * count
+                  for kind, count in cfg.pattern) * cfg.repeats
+    head_f = 2.0 * cfg.d_model * cfg.out_dim
+    fwd = tokens * (per_tok + head_f)
+    if cfg.enc_dec and mem_len:
+        enc_tok = float(B) * mem_len * (1 if shape.kind != "decode" else 0)
+        fwd += enc_tok * cfg.n_enc_layers * _block_fwd_flops_per_token(
+            cfg, "dense", mem_len / 2.0)
+    if shape.kind != "train":
+        return fwd
+    # backward: remat re-forward + dgrad (~= fwd each) + trainable wgrads
+    wgrad = tokens * (4.0 * cfg.d_model * cfg.adapter.bottleneck * cfg.n_layers
+                      + 2.0 * cfg.d_model * cfg.out_dim)
+    return 3.0 * fwd + wgrad
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> Dict[str, float]:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params."""
+    from repro.models import params as prm
+
+    n_total = prm.count_params(prm.param_defs(cfg))
+    n_active = prm.count_active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return {"model_flops": 6.0 * n_active * tokens,
+                "n_params": n_total, "n_active": n_active, "tokens": tokens}
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return {"model_flops": 2.0 * n_active * tokens,
+                "n_params": n_total, "n_active": n_active, "tokens": tokens}
+    tokens = shape.global_batch          # one new token per sequence
+    return {"model_flops": 2.0 * n_active * tokens,
+            "n_params": n_total, "n_active": n_active, "tokens": tokens}
+
+
+# ---------------------------------------------------------------------------
+# Roofline assembly
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    model_flops: float
+    n_params: float
+    n_active: float
+    analytic_flops_total: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        """XLA's CPU cost model drops trip counts for some SPMD-partitioned
+        scans (documented in EXPERIMENTS.md), so the compute term uses the
+        larger of the XLA estimate and the analytic per-chip FLOPs."""
+        per_chip = max(self.hlo_flops_per_chip,
+                       self.analytic_flops_total / self.chips)
+        return per_chip / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes_per_chip / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_chip / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        total = max(self.hlo_flops_per_chip * self.chips,
+                    self.analytic_flops_total)
+        return self.model_flops / total if total else float("nan")
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline-optimistic step time: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline-optimistic step time."""
+        t = self.step_time_s
+        return (self.model_flops / (self.chips * PEAK_FLOPS * t)) if t else 0.0
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d.update(compute_s=self.compute_s, memory_s=self.memory_s,
+                 collective_s=self.collective_s, dominant=self.dominant,
+                 useful_ratio=self.useful_ratio, step_time_s=self.step_time_s,
+                 mfu=self.mfu)
+        return d
+
+
+def build(arch: str, shape: InputShape, mesh_name: str, chips: int,
+          cost: Dict[str, float], coll: Dict[str, float],
+          mf: Dict[str, float], analytic: float = 0.0) -> Roofline:
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops_per_chip=float(cost.get("flops", 0.0)),
+        hlo_bytes_per_chip=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes_per_chip=float(coll.get("total", 0.0)) / chips,
+        model_flops=mf["model_flops"], n_params=mf["n_params"],
+        n_active=mf["n_active"], analytic_flops_total=analytic)

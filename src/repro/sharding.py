@@ -1,0 +1,122 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Every parameter/activation dimension carries a *logical* axis name; rules translate
+logical names into mesh axes for the active mesh. Production meshes:
+
+  * single pod : (data=16, model=16)                      -- 256 chips
+  * multi pod  : (pod=2, data=16, model=16)               -- 512 chips
+
+Weights are Megatron-sharded on ``model`` (heads / ffn / experts / vocab) and
+FSDP-sharded on the data axes (``embed`` dim), so the 400B-scale MoE fits.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+
+def default_rules(mesh: Mesh) -> Dict[str, MeshAxes]:
+    """Logical axis name -> mesh axes, adapted to which axes the mesh has."""
+    axes = mesh.axis_names
+    fsdp: MeshAxes = ("pod", "data") if "pod" in axes else ("data",)
+    model: MeshAxes = "model" if "model" in axes else None
+    batch: MeshAxes = ("pod", "data") if "pod" in axes else ("data",)
+    return {
+        "_axis_sizes": {name: mesh.shape[name] for name in axes},
+        # ---- weights ----
+        "vocab": model,          # embedding / lm head vocab dim
+        "embed": fsdp,           # d_model dim of weights => FSDP all-gather at use
+        "heads": model,
+        "kv_heads": model,
+        "head_dim": None,
+        "ffn": model,            # Megatron column/row parallel
+        "experts": model,        # expert parallelism
+        "expert_ffn": None,
+        "expert_embed": None,    # small-expert MoE: no FSDP on d_model dim
+        "bottleneck": None,      # adapter m
+        "layers": None,          # stacked-scan leading axes
+        "state": None,           # SSM state dims
+        "conv": None,
+        "lora": None,
+        "pos": None,
+        "norm": None,
+        # ---- activations ----
+        "batch": batch,
+        "seq": None,
+        "act_embed": model,      # d_model dim of activations (tensor-parallel)
+        "act_heads": model,
+        "kv_seq": (("data", "model") if "model" in axes else ("data",))
+        if "data" in axes else model,   # KV cache seq: data then model
+        "frontend_seq": None,
+    }
+
+
+def spec_for(logical: Sequence[Optional[str]],
+             rules: Dict[str, MeshAxes],
+             shape: Optional[Sequence[int]] = None) -> P:
+    """Translate logical axis names into a PartitionSpec.
+
+    With ``shape`` given, a mesh axis is only assigned to a dimension whose size
+    it divides (pjit rejects uneven *explicit* input shardings — e.g. kv_heads=8
+    cannot shard over model=16 and is replicated instead, the Megatron GQA rule).
+    For tuple axes, the longest divisible prefix is kept.
+    """
+    sizes: Dict[str, int] = rules.get("_axis_sizes", {})
+    used: set = set()
+    parts = []
+    for i, name in enumerate(logical):
+        if name is None:
+            parts.append(None)
+            continue
+        ax = rules.get(name, None)
+        if ax is None:
+            parts.append(None)
+            continue
+        # never assign the same mesh axis twice in one spec
+        flat = (ax,) if isinstance(ax, str) else tuple(ax)
+        flat = tuple(a for a in flat if a not in used)
+        if shape is not None and sizes:
+            dim = shape[i]
+            keep = []
+            prod = 1
+            for a in flat:
+                if dim % (prod * sizes.get(a, 1)) == 0:
+                    keep.append(a)
+                    prod *= sizes.get(a, 1)
+                else:
+                    break
+            flat = tuple(keep)
+        if not flat:
+            parts.append(None)
+            continue
+        used.update(flat)
+        parts.append(flat[0] if len(flat) == 1 else flat)
+    return P(*parts)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+# ---------------------------------------------------------------------------
+# Convenience: divide batch across data axes, validating divisibility softly
+# ---------------------------------------------------------------------------
+
+def batch_spec(rules: Dict[str, MeshAxes]) -> P:
+    return spec_for(("batch", None), rules)
+
+
+def data_axis_size(mesh: Mesh) -> int:
+    n = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            n *= mesh.shape[ax]
+    return n

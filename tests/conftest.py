@@ -1,0 +1,20 @@
+import os
+import sys
+
+# Tests must see the default 1-device CPU backend (the dry-run sets its own
+# 512-device flag in a separate process). Keep compile times sane.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

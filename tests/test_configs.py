@@ -1,0 +1,98 @@
+"""The assigned architecture table is a contract — verify every number."""
+import pytest
+
+from repro.configs import ASSIGNED, INPUT_SHAPES, get_config, list_configs
+from repro.models import params as prm
+
+
+EXPECTED = {
+    # name: (L, d_model, H, kv, d_ff, vocab)
+    "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+    "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+    "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+    "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+    "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+    "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+    "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+    "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+    "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+}
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_exact_assignment(name):
+    cfg = get_config(name)
+    L, d, H, kv, ff, V = EXPECTED[name]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == H
+    assert cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == V
+
+
+def test_registry_complete():
+    known = list_configs()
+    for name in ASSIGNED:
+        assert name in known
+    assert "mbert-squad" in known          # the paper's own eval model
+
+
+def test_moe_details():
+    m = get_config("olmoe-1b-7b").moe
+    assert (m.n_experts, m.top_k, m.d_expert) == (64, 8, 1024)
+    m = get_config("moonshot-v1-16b-a3b").moe
+    assert (m.n_experts, m.top_k, m.d_expert) == (64, 6, 1408)
+    m = get_config("llama4-maverick-400b-a17b").moe
+    assert (m.n_experts, m.top_k) == (128, 1)
+
+
+def test_pattern_layer_counts():
+    for name in ASSIGNED:
+        cfg = get_config(name)
+        assert cfg.repeats * cfg.layers_per_repeat == cfg.n_layers
+
+
+def test_vlm_cross_layers():
+    cfg = get_config("llama-3.2-vision-11b")
+    assert cfg.pattern == (("dense", 4), ("cross", 1))
+    assert cfg.repeats == 8                # 8 cross-attn layers of 40
+
+
+def test_subquadratic_flags():
+    runs_500k = {n for n in ASSIGNED
+                 if get_config(n).subquadratic}
+    assert runs_500k == {"starcoder2-7b", "qwen2.5-3b", "hymba-1.5b",
+                         "rwkv6-7b", "llama4-maverick-400b-a17b"}
+
+
+def test_param_counts_plausible():
+    # active < total for MoE, equal for dense
+    for name in ASSIGNED:
+        cfg = get_config(name)
+        defs = prm.param_defs(cfg)
+        total = prm.count_params(defs)
+        active = prm.count_active_params(cfg)
+        if cfg.moe:
+            assert active < total
+        else:
+            assert active == total
+    n = prm.count_params(prm.param_defs(get_config("llama4-maverick-400b-a17b")))
+    assert 3.5e11 < n < 4.7e11             # the "400b" in the name
+    n = prm.count_params(prm.param_defs(get_config("starcoder2-7b")))
+    assert 6e9 < n < 9e9
+
+
+def test_reduced_variants_small():
+    for name in ASSIGNED:
+        r = get_config(name).reduced()
+        assert r.d_model <= 512 and r.n_layers <= 2 * r.layers_per_repeat
+        if r.moe:
+            assert r.moe.n_experts <= 4
+
+
+def test_input_shapes():
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["decode_32k"].kind == "decode"

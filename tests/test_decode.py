@@ -1,0 +1,134 @@
+"""Serving correctness: prefill + decode_step must agree with the full forward."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.models import params as prm
+from repro.models import transformer as tfm
+from repro.models import kvcache
+
+NON_MOE = [n for n in ASSIGNED if get_config(n).moe is None]
+MOE = [n for n in ASSIGNED if get_config(n).moe is not None]
+
+
+def _setup(name, B=2, S=32):
+    cfg = get_config(name).reduced()
+    params = prm.materialize(prm.param_defs(cfg), jax.random.key(0), cfg.dtype)
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.frontend or cfg.enc_dec:
+        kw["memory"] = 0.1 * jax.random.normal(jax.random.key(2),
+                                               (B, 16, cfg.d_model),
+                                               jnp.bfloat16)
+    return cfg, params, tokens, kw
+
+
+@pytest.mark.parametrize("name", NON_MOE)
+def test_prefill_decode_matches_forward(name):
+    cfg, params, tokens, kw = _setup(name)
+    S = tokens.shape[1]
+    full, _ = tfm.forward(params, tokens, cfg, **kw)
+    pl, cache = tfm.prefill(params, tokens[:, :S - 1], cfg, seq_len=256, **kw)
+    dl, cache2 = tfm.decode_step(params, tokens[:, S - 1:S], cache, cfg)
+    f32 = lambda x: x.astype(jnp.float32)
+    assert jnp.allclose(f32(pl), f32(full[:, S - 2]), atol=2e-2)
+    assert jnp.allclose(f32(dl), f32(full[:, S - 1]), atol=2e-2)
+    assert int(cache2["next"][0]) == int(cache["next"][0]) + 1
+
+
+@pytest.mark.parametrize("name", MOE)
+def test_prefill_decode_matches_forward_moe(name):
+    # MoE decode can legitimately differ where full-seq routing dropped tokens
+    # (capacity) — tolerance covers the gate-weighted expert output delta.
+    cfg, params, tokens, kw = _setup(name)
+    S = tokens.shape[1]
+    full, _ = tfm.forward(params, tokens, cfg, **kw)
+    pl, cache = tfm.prefill(params, tokens[:, :S - 1], cfg, seq_len=256, **kw)
+    dl, _ = tfm.decode_step(params, tokens[:, S - 1:S], cache, cfg)
+    f32 = lambda x: x.astype(jnp.float32)
+    assert jnp.allclose(f32(pl), f32(full[:, S - 2]), atol=2e-2)
+    assert jnp.allclose(f32(dl), f32(full[:, S - 1]), atol=0.5)
+
+
+@pytest.mark.parametrize("name", ["qwen2.5-3b", "hymba-1.5b", "rwkv6-7b"])
+def test_multistep_greedy_decode_matches_forward(name):
+    """Greedy continuation via cache == greedy continuation via re-forward."""
+    cfg, params, tokens, kw = _setup(name, B=1, S=16)
+    n_new = 6
+    _, cache = tfm.prefill(params, tokens, cfg, seq_len=256, **kw)
+    cur = tokens
+    nxt = None
+    cached_out = []
+    logits, _ = tfm.forward(params, cur, cfg, **kw)
+    step_tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    for _ in range(n_new):
+        cached_out.append(int(step_tok[0, 0]))
+        logits1, cache = tfm.decode_step(params, step_tok, cache, cfg)
+        step_tok = jnp.argmax(logits1, -1)[:, None].astype(jnp.int32)
+
+    ref_out = []
+    cur = tokens
+    for _ in range(n_new):
+        logits, _ = tfm.forward(params, cur, cfg, **kw)
+        t = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        ref_out.append(int(t[0, 0]))
+        cur = jnp.concatenate([cur, t], axis=1)
+    assert cached_out == ref_out
+
+
+def test_sliding_window_cache_bounded():
+    cfg = get_config("starcoder2-7b").reduced()     # window 128 after reduce
+    assert cfg.sliding_window == 128
+    c = kvcache.init_cache(cfg, 1, 4096)
+    assert c["layers"][0]["k"].shape[3] == 128       # Ck = window, not 4096
+    assert kvcache.cache_len(cfg, 4096) == 128
+
+
+def test_rwkv_cache_constant_size():
+    cfg = get_config("rwkv6-7b").reduced()
+    c1 = kvcache.init_cache(cfg, 1, 128)
+    c2 = kvcache.init_cache(cfg, 1, 4096)
+    # attention-free: state size independent of horizon (pos array aside)
+    s1 = c1["layers"][0]["state"].size
+    s2 = c2["layers"][0]["state"].size
+    assert s1 == s2
+
+
+def test_sliding_window_decode_correct_beyond_window():
+    """Decode far past the window: ring buffer must match a windowed forward."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("stablelm-3b").reduced(),
+                              sliding_window=8)
+    params = prm.materialize(prm.param_defs(cfg), jax.random.key(0), cfg.dtype)
+    S = 24
+    tokens = jax.random.randint(jax.random.key(1), (1, S), 0, cfg.vocab_size)
+    full, _ = tfm.forward(params, tokens, cfg)        # masked SWA reference
+    _, cache = tfm.prefill(params, tokens[:, :S - 1], cfg, seq_len=64)
+    dl, _ = tfm.decode_step(params, tokens[:, S - 1:S], cache, cfg)
+    assert jnp.allclose(dl.astype(jnp.float32),
+                        full[:, S - 1].astype(jnp.float32), atol=2e-2)
+
+
+def test_int8_kv_cache_decode():
+    """Beyond-paper: int8 KV cache halves decode memory at bounded logit error."""
+    import dataclasses
+    for name in ["stablelm-3b", "hymba-1.5b"]:
+        cfg = dataclasses.replace(get_config(name).reduced(), kv_quant=True)
+        params = prm.materialize(prm.param_defs(cfg), jax.random.key(0),
+                                 cfg.dtype)
+        B, S = 2, 32
+        tokens = jax.random.randint(jax.random.key(1), (B, S), 0,
+                                    cfg.vocab_size)
+        full, _ = tfm.forward(params, tokens, cfg)
+        _, cache = tfm.prefill(params, tokens[:, :S - 1], cfg, seq_len=256)
+        assert cache["layers"][0]["k"].dtype == jnp.int8
+        dl, _ = tfm.decode_step(params, tokens[:, S - 1:S], cache, cfg)
+        err = jnp.abs(dl.astype(jnp.float32)
+                      - full[:, S - 1].astype(jnp.float32)).max()
+        assert float(err) < 0.5
+        # byte accounting: int8 k/v + bf16 scales < half of bf16 k/v
+        q = kvcache.cache_bytes(kvcache.init_cache(cfg, 1, 1024))
+        f = kvcache.cache_bytes(kvcache.init_cache(
+            dataclasses.replace(cfg, kv_quant=False), 1, 1024))
+        assert q < 0.6 * f

@@ -1,0 +1,75 @@
+"""The trace-based simulator must reproduce the paper's qualitative Table I:
+RingAda < PipeAdapter < Single on both time and memory."""
+import pytest
+
+from repro.core.partition import DeviceProfile
+from repro.core.simulator import (LayerProfile, SimConfig, simulate_round,
+                                  simulate_training)
+
+
+def _layers(n=12):
+    return [LayerProfile(fwd_s=0.01, bwd_s=0.02, act_mb=20.0, weight_mb=30.0,
+                         adapter_mb=0.6, boundary_mb=2.0)] * n
+
+
+def _devices(u=4):
+    return [DeviceProfile(compute_speed=1.0, memory_mb=4096,
+                          link_mbps=1000.0)] * u
+
+
+def test_single_vs_pipeline_time():
+    sim = SimConfig(n_layers=12, n_devices=4, n_microbatches=8,
+                    head_fwd_s=0.002, head_bwd_s=0.004, head_mb=50, embed_mb=50)
+    r_single = simulate_round("single", sim, _layers(), _devices())
+    r_pipe = simulate_round("pipe_adapter", sim, _layers(), _devices())
+    assert r_pipe.time_per_round_s < r_single.time_per_round_s
+
+
+def test_ringada_faster_than_pipeadapter_when_frozen():
+    sim = SimConfig(n_layers=12, n_devices=4, n_microbatches=8)
+    r_pipe = simulate_round("pipe_adapter", sim, _layers(), _devices())
+    r_ring = simulate_round("ringada", sim, _layers(), _devices(),
+                            unfreeze_depth=3)
+    assert r_ring.time_per_round_s < r_pipe.time_per_round_s
+
+
+def test_memory_ordering_matches_table1():
+    sim = SimConfig(n_layers=12, n_devices=4, n_microbatches=8,
+                    head_mb=50, embed_mb=50)
+    m_single = simulate_round("single", sim, _layers(), _devices()
+                              ).max_memory_mb
+    m_pipe = simulate_round("pipe_adapter", sim, _layers(), _devices()
+                            ).max_memory_mb
+    m_ring = simulate_round("ringada", sim, _layers(), _devices(),
+                            unfreeze_depth=3).max_memory_mb
+    assert m_ring < m_pipe < m_single
+
+
+def test_deeper_unfreezing_costs_more():
+    sim = SimConfig(n_layers=12, n_devices=4, n_microbatches=8)
+    times = [simulate_round("ringada", sim, _layers(), _devices(),
+                            unfreeze_depth=d).time_per_round_s
+             for d in (1, 6, 12)]
+    assert times[0] < times[1] <= times[2]
+
+
+def test_training_schedule_integration():
+    sim = SimConfig(n_layers=12, n_devices=4, n_microbatches=8)
+    t_ring, m_ring, curve = simulate_training(
+        "ringada", sim, _layers(), _devices(), rounds=50,
+        unfreeze_interval=10)
+    t_pipe, m_pipe, _ = simulate_training(
+        "pipe_adapter", sim, _layers(), _devices(), rounds=50)
+    assert t_ring < t_pipe
+    assert m_ring < m_pipe
+    assert len(curve) == 50 and curve == sorted(curve)
+
+
+def test_heterogeneous_devices_respected():
+    sim = SimConfig(n_layers=12, n_devices=4, n_microbatches=4)
+    slow = [DeviceProfile(0.25, 4096), DeviceProfile(1.0, 4096),
+            DeviceProfile(1.0, 4096), DeviceProfile(1.0, 4096)]
+    fast = _devices()
+    r_slow = simulate_round("pipe_adapter", sim, _layers(), slow)
+    r_fast = simulate_round("pipe_adapter", sim, _layers(), fast)
+    assert r_slow.time_per_round_s > r_fast.time_per_round_s

@@ -1,0 +1,196 @@
+"""Optimizer, data pipeline, checkpointing, sharding rules, roofline parser."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import TrainConfig, get_config
+from repro.core import training
+from repro.data.pipeline import (Batcher, RingBatcher, make_client_datasets,
+                                 merged)
+from repro.checkpoint import checkpoint as ckpt
+from repro.models import params as prm
+from repro.optim import adamw
+from repro import roofline as rl
+from repro import sharding as sh
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def _tiny():
+    cfg = get_config("stablelm-3b").reduced(n_layers=4, repeats=4)
+    params = prm.materialize(prm.param_defs(cfg), jax.random.key(0))
+    return cfg, params
+
+
+def test_adamw_row_masking():
+    cfg, params = _tiny()
+    tr_full = training.full_trainable(params)
+    opt = adamw.init(tr_full)
+    b = 2
+    grads = {"adapters": tuple(
+        jax.tree.map(lambda x: jnp.ones_like(x[b:], jnp.float32), e["adapter"])
+        for e in params["blocks"]),
+        "head": jax.tree.map(lambda x: jnp.ones_like(x, jnp.float32),
+                             params["head"])}
+    tc = TrainConfig(learning_rate=0.1, warmup_steps=1)
+    new_tr, new_opt = adamw.update(grads, opt, tr_full, tc, b)
+    wd0 = tr_full["adapters"][0]["w_down"]
+    wd1 = new_tr["adapters"][0]["w_down"]
+    assert jnp.array_equal(wd0[:b], wd1[:b])             # frozen untouched
+    assert not jnp.array_equal(wd0[b:], wd1[b:])         # hot updated
+    assert int(new_opt["count"]) == 1
+    # frozen moments remain exactly zero
+    assert float(jnp.abs(new_opt["m"]["adapters"][0]["w_down"][:b]).max()) == 0
+
+
+def test_adamw_state_stable_across_boundaries():
+    cfg, params = _tiny()
+    opt = adamw.init(training.full_trainable(params))
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (2, 32), 0,
+                                          cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.key(2), (2, 32), 0,
+                                          cfg.vocab_size)}
+    tc = TrainConfig()
+    p, o = params, opt
+    for b in (3, 2, 1):                    # schedule moves, state tree constant
+        step = jax.jit(training.make_train_step(cfg, tc, b))
+        p, o, _ = step(p, o, batch)
+    assert jax.tree.structure(o) == jax.tree.structure(opt)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_client_datasets_distinct_and_deterministic():
+    a = make_client_datasets(3, vocab=97, n_per_client=8, seq=16, seed=1)
+    b = make_client_datasets(3, vocab=97, n_per_client=8, seq=16, seed=1)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x.tokens, y.tokens)
+    assert not np.array_equal(a[0].tokens, a[1].tokens)
+    assert a[0].tokens.max() < 97 and a[0].tokens.min() >= 0
+    # lm labels are shifted tokens
+    np.testing.assert_array_equal(a[0].labels[:, :-1], a[0].tokens[:, 1:])
+
+
+def test_ring_batcher_shapes():
+    ds = make_client_datasets(4, vocab=50, n_per_client=16, seq=8, seed=0)
+    rb = RingBatcher(ds, n_micro=3, micro_batch=2, seed=0)
+    t, l = rb.next()
+    assert t.shape == (4, 3, 2, 8) and l.shape == (4, 3, 2, 8)
+
+
+def test_qa_datasets():
+    ds = make_client_datasets(2, vocab=100, n_per_client=8, seq=32, seed=0,
+                              kind="qa")
+    b = Batcher(ds[0], 4, seed=0).next()
+    assert b["starts"].shape == (4,)
+    assert (np.asarray(b["ends"]) >= np.asarray(b["starts"])).all()
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg, params = _tiny()
+    path = os.path.join(tmp_path, "ck")
+    ckpt.save(path, params, step=7)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    restored, meta = ckpt.restore(path, zeros)
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_adapters_only(tmp_path):
+    cfg, params = _tiny()
+    path = os.path.join(tmp_path, "ad")
+    ckpt.save(path, params, adapters_only=True)
+    data = np.load(path + ".npz")
+    assert all(("adapter" in k.split("::")) or k.startswith("head")
+               for k in data.files)
+    assert any("adapter" in k for k in data.files)
+    # restore keeps non-adapter leaves from the template
+    tpl = jax.tree.map(jnp.zeros_like, params)
+    restored, _ = ckpt.restore(path, tpl)
+    assert float(jnp.abs(restored["embed"]["tok"]).max()) == 0
+    np.testing.assert_array_equal(
+        np.asarray(restored["head"]["w"], np.float32),
+        np.asarray(params["head"]["w"], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+
+def test_spec_for_divisibility():
+    rules = {"_axis_sizes": {"data": 16, "model": 16, "pod": 2},
+             "kv_heads": "model", "embed": ("pod", "data"), "vocab": "model"}
+    from jax.sharding import PartitionSpec as P
+    # kv=8 can't shard over 16 -> replicated
+    assert sh.spec_for(("embed", "kv_heads", None), rules,
+                       (5120, 8, 128)) == P(("pod", "data"), None, None)
+    # 24 divisible by pod(2) but not pod*data(32) -> prefix kept
+    assert sh.spec_for(("embed",), rules, (24,)) == P("pod")
+    assert sh.spec_for(("vocab",), rules, (256206,)) == P(None)
+    assert sh.spec_for(("vocab",), rules, (49152,)) == P("model")
+
+
+def test_spec_never_reuses_axis():
+    rules = {"_axis_sizes": {"data": 4}, "batch": ("data",), "kv_seq": "data"}
+    from jax.sharding import PartitionSpec as P
+    s = sh.spec_for(("batch", "kv_seq"), rules, (8, 64))
+    assert s == P("data", None)
+    s = sh.spec_for(("batch", "kv_seq"), rules, (1, 64))   # batch=1: drop
+    assert s == P(None, "data")
+
+
+# ---------------------------------------------------------------------------
+# Roofline HLO parsing
+# ---------------------------------------------------------------------------
+
+
+HLO = """
+HloModule test
+
+%body.1 (p: (f32[128,256])) -> (f32[128,256]) {
+  %ag = f32[256,256]{1,0} all-gather(f32[16,256]{1,0} %x), replica_groups={}
+  ROOT %t = (f32[128,256]) tuple(%ag2)
+}
+
+ENTRY %main (a: f32[128,256]) -> f32[128,256] {
+  %w = (f32[128,256]) while((f32[128,256]) %init), condition=%c, body=%body.1, backend_config={"known_trip_count":{"n":"8"}}
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %y), to_apply=%sum
+  ROOT %r = f32[128,256]{1,0} copy(%ar)
+}
+"""
+
+
+def test_collective_bytes_trip_counts():
+    out = rl.collective_bytes(HLO)
+    # all-gather operand: 16*256*4 = 16384 bytes, x8 trips = 131072
+    assert out["all-gather"] == 16 * 256 * 4 * 8
+    # all-reduce operand: 128*256*4 once
+    assert out["all-reduce"] == 128 * 256 * 4
+    assert out["total"] == out["all-gather"] + out["all-reduce"]
+
+
+def test_model_flops_conventions():
+    from repro.configs import INPUT_SHAPES
+    cfg = get_config("olmoe-1b-7b")
+    mf_t = rl.model_flops(cfg, INPUT_SHAPES["train_4k"])
+    mf_d = rl.model_flops(cfg, INPUT_SHAPES["decode_32k"])
+    assert mf_t["n_active"] < mf_t["n_params"]
+    assert mf_t["model_flops"] == 6.0 * mf_t["n_active"] * 256 * 4096
+    assert mf_d["model_flops"] == 2.0 * mf_d["n_active"] * 128
