@@ -1,19 +1,177 @@
-"""Ring-pipeline benchmark: tick counts + simulated utilization per unfreeze
-depth, plus (if >=4 devices available) real shard_map round wall-times."""
+"""Ring-pipeline benchmark.
+
+Three sections:
+  1. analytic tick counts per unfreeze depth,
+  2. simulated round time + utilization (discrete-event MPMD model),
+  3. **fused-vs-reference**: real wall-clock steps/sec, executable counts and
+     per-executable memory (incl. donation aliasing) for the fused
+     ``RingExecutor`` against the unfused ``RingTrainer`` on a 4-(host-)device
+     ring.  Runs in a subprocess so the parent process keeps its 1-device
+     backend; invoke directly with ``python benchmarks/pipeline_bench.py`` or
+     through ``benchmarks/run.py``.
+"""
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 from typing import Dict
 
-import jax
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-from repro.core.partition import DeviceProfile
-from repro.core.pipeline import pipeline_tick_counts
-from repro.core.simulator import LayerProfile, SimConfig, simulate_round
+_FUSED_SCRIPT = r"""
+import os, time, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import jax, jax.numpy as jnp
+from repro import compat
+from repro.configs import TrainConfig, get_config
+from repro.core.executor import RingExecutor
+from repro.core.ring import RingTrainer
+from repro.models import params as prm
+
+# Edge-device regime: tiny per-client microbatches over small adapters — the
+# setting where RingAda claims its win and where dispatch / host-sync /
+# staged-recompile overheads dominate.
+S, M, mb, seq = 4, 4, 1, 32
+cfg = get_config("stablelm-3b").reduced(n_layers=4, repeats=4,
+                                        d_model=128, d_ff=256)
+mesh = compat.make_mesh((S,), ("stage",))
+tokens = jax.random.randint(jax.random.key(1), (S, M, mb, seq), 0,
+                            cfg.vocab_size)
+labels = jax.random.randint(jax.random.key(2), (S, M, mb, seq), 0,
+                            cfg.vocab_size)
+
+def fresh_params():
+    return prm.materialize(prm.param_defs(cfg), jax.random.key(0), cfg.dtype)
+
+def sync(last):
+    if hasattr(last["loss"], "block_until_ready"):
+        last["loss"].block_until_ready()             # fused: one final sync
+
+out = {}
+with compat.set_mesh(mesh):
+    # 1. end-to-end: the paper's schedule walks every boundary; each bump
+    #    recompiles S executables on the reference path, 1 on the fused path.
+    SCHED_ROUNDS = 8
+    tc_sched = TrainConfig(learning_rate=1e-3, unfreeze_interval=S,
+                           n_microbatches=M, batch_size=mb, seq_len=seq)
+    for name, cls in (("reference", RingTrainer), ("fused", RingExecutor)):
+        drv = cls(cfg, tc_sched, mesh, fresh_params(), S, M)
+        t0 = time.time()
+        last = None
+        for _ in range(SCHED_ROUNDS):
+            last = drv.round(tokens, labels)
+        sync(last)
+        dt = time.time() - t0
+        out.setdefault("schedule", {})[name] = {
+            "steps_per_sec": S * SCHED_ROUNDS / dt,
+            "wall_s": dt,
+            "n_executables": drv.n_executables,
+        }
+
+    # 2. steady state: fixed boundary, compile excluded.
+    ROUNDS = 16
+    tc_fix = TrainConfig(learning_rate=1e-3, unfreeze_interval=10**6,
+                         n_microbatches=M, batch_size=mb, seq_len=seq)
+    for name, cls in (("reference", RingTrainer), ("fused", RingExecutor)):
+        drv = cls(cfg, tc_fix, mesh, fresh_params(), S, M)
+        t0 = time.time()
+        drv.round(tokens, labels)                    # warmup: compile
+        compile_s = time.time() - t0
+        t0 = time.time()
+        last = None
+        for _ in range(ROUNDS):
+            last = drv.round(tokens, labels)
+        sync(last)
+        dt = time.time() - t0
+        rec = {"steps_per_sec": S * ROUNDS / dt, "compile_s": compile_s,
+               "round_ms": 1e3 * dt / ROUNDS,
+               "n_executables": drv.n_executables}
+        stats = jax.devices()[0].memory_stats() or {}
+        if "peak_bytes_in_use" in stats:
+            rec["device_peak_bytes"] = stats["peak_bytes_in_use"]
+        out.setdefault("steady", {})[name] = rec
+
+    # per-executable memory analysis: the fused step aliases (donates) params +
+    # moments; the reference path re-materializes grads/outputs per dispatch
+    # and runs its optimizer un-donated on the host.
+    def mem_record(ma):
+        return {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,   # donated: no second copy
+            "peak_bytes": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                           + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+        }
+
+    abstract = lambda t: jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    ex = RingExecutor(cfg, tc_fix, mesh, fresh_params(), S, M, donate=True)
+    b = ex.boundary_at(0)
+    ma = ex._fn(b).lower(
+        abstract(ex.stage_blocks), abstract(ex.shared),
+        abstract(ex.opt_state), abstract(tokens),
+        abstract(labels)).compile().memory_analysis()
+    if ma is not None:
+        out["fused_memory"] = mem_record(ma)
+    ref = RingTrainer(cfg, tc_fix, mesh, fresh_params(), S, M)
+    ma_ref = ref._fn(0, b).lower(
+        abstract(ref.stage_blocks), abstract(ref.shared),
+        abstract(tokens), abstract(labels)).compile().memory_analysis()
+    if ma_ref is not None:
+        out["reference_memory"] = mem_record(ma_ref)
+
+out["speedup"] = (out["schedule"]["fused"]["steps_per_sec"]
+                  / out["schedule"]["reference"]["steps_per_sec"])
+out["steady_speedup"] = (out["steady"]["fused"]["steps_per_sec"]
+                         / out["steady"]["reference"]["steps_per_sec"])
+print(json.dumps(out))
+"""
+
+
+def bench_fused_vs_reference(log=print) -> Dict:
+    """Run the fused-vs-reference comparison in a 4-device subprocess."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    try:
+        res = subprocess.run([sys.executable, "-c", _FUSED_SCRIPT], env=env,
+                             capture_output=True, text=True, timeout=900)
+    except subprocess.TimeoutExpired:
+        return {"skipped": "timeout"}
+    if res.returncode != 0:
+        return {"skipped": res.stderr[-2000:]}
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    for name in ("reference", "fused"):
+        r = out["schedule"][name]
+        log(f"  schedule {name:9s}: {r['steps_per_sec']:6.2f} steps/s "
+            f"end-to-end ({r['wall_s']:.1f}s, {r['n_executables']} "
+            f"executables over all boundaries)")
+    for name in ("reference", "fused"):
+        r = out["steady"][name]
+        log(f"  steady   {name:9s}: {r['steps_per_sec']:6.2f} steps/s "
+            f"({r['round_ms']:.0f} ms/round, compile {r['compile_s']:.1f}s, "
+            f"{r['n_executables']} executable(s))")
+    for key in ("fused_memory", "reference_memory"):
+        if key in out:
+            fm = out[key]
+            log(f"  {key.split('_')[0]:9s} executable: "
+                f"peak={fm['peak_bytes'] / 2**20:.1f} MiB "
+                f"(donation aliases {fm['alias_bytes'] / 2**20:.1f} MiB)")
+    log(f"  speedup: {out['speedup']:.2f}x end-to-end, "
+        f"{out['steady_speedup']:.2f}x steady-state")
+    return out
 
 
 def run(log=print) -> Dict:
     out = {}
     S, M, lps = 4, 8, 3           # 12 blocks over 4 stages
+    from repro.core.partition import DeviceProfile
+    from repro.core.pipeline import pipeline_tick_counts
+    from repro.core.simulator import LayerProfile, SimConfig, simulate_round
+
     ticks = {}
     for frozen_stages in range(S):
         t = pipeline_tick_counts(S, M, boundary=frozen_stages * lps, lps=lps)
@@ -37,4 +195,12 @@ def run(log=print) -> Dict:
         log(f"  depth={depth:2d}: round={r.time_per_round_s:.3f}s "
             f"util={busy / (r.time_per_round_s * 4):.2%}")
     out["simulated_rounds"] = util
+
+    log("fused RingExecutor vs reference RingTrainer (4 host devices):")
+    out["fused_vs_reference"] = bench_fused_vs_reference(log)
     return out
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    print(json.dumps(run(), indent=1))

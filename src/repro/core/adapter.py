@@ -11,7 +11,7 @@ frozen trunk computes.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,232 @@
+"""RingExecutor: the fused end-to-end ring training step.
+
+One donated, jitted executable per unfreeze boundary runs a FULL RingAda round
+— all S owner-iterations (forward, early-stopped backward, stage-masked AdamW
+on the adapters, replicated AdamW on the head) — entirely on device:
+
+  * the owner rotation is a ``lax.scan`` over owners *inside* the executable;
+    the owner-dependent hops use ``pipeline.ring_round_local``'s dynamic
+    permutes so owner can be traced (the reference ``RingTrainer`` instead
+    compiles one executable per (owner, boundary) pair: S x boundaries),
+  * the optimizer is ``optim.adamw.tree_update`` with a stage mask
+    ``stage >= F`` — frozen stages' adapters AND their Adam moments are
+    bit-identical before and after the round,
+  * params + optimizer moments are donated (``donate_argnums``), so the round
+    updates in place instead of holding two copies live,
+  * nothing syncs to the host: ``round()`` returns device arrays; callers
+    ``float()`` them once per logging interval (async dispatch).
+
+Numerics match ``RingTrainer`` exactly (same ``adamw.leaf_update`` math,
+constant lr, no bias correction) — asserted by tests/test_executor.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import pipeline as pl
+from repro.core.unfreeze import UnfreezeSchedule, depth_to_boundary
+from repro.optim import adamw
+
+Array = jax.Array
+
+
+def ring_opt_init(stage_blocks: Dict[str, Any], shared: Dict[str, Any]
+                  ) -> Dict[str, Any]:
+    """Ring optimizer state: adapter moments stage-stacked [S, lps, ...]
+    (sharded with the adapters — optimizer state never crosses the ring, like
+    the paper), head moments replicated."""
+    m_ad, v_ad = adamw.init_moments(stage_blocks["adapter"])
+    m_hd, v_hd = adamw.init_moments(shared["head"])
+    return {"m": {"adapter": m_ad, "head": m_hd},
+            "v": {"adapter": v_ad, "head": v_hd},
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def ring_opt_specs() -> Dict[str, Any]:
+    """PartitionSpec tree matching ``ring_opt_init``'s structure."""
+    return {"m": {"adapter": P("stage"), "head": P()},
+            "v": {"adapter": P("stage"), "head": P()},
+            "count": P()}
+
+
+def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
+                     n_stages: int, boundary: int, n_micro: int,
+                     on_trace=None):
+    """Build the fused round:
+
+      fn(stage_blocks, shared, opt_state, tokens, labels)
+        -> (stage_blocks, shared, opt_state, losses[S])
+
+    Static per build: boundary only.  ``on_trace`` (if given) is called each
+    time the function body is traced — i.e. once per XLA compilation — which is
+    how tests count executables.  Wrap the result in
+    ``jax.jit(..., donate_argnums=(0, 1, 2))`` (RingExecutor does).
+    """
+    S = n_stages
+    lps = cfg.repeats // S
+    assert boundary % lps == 0, f"boundary {boundary} not stage-aligned"
+    F = boundary // lps
+    local_round = pl.ring_round_local(cfg, n_stages=S, boundary=boundary,
+                                      n_micro=n_micro)
+    lr = jnp.float32(tc.learning_rate)
+
+    def fused(stage_blocks, shared, opt_state, tokens, labels):
+        # Local (per-shard) views: stage-sharded leaves arrive as [1, lps, ...].
+        if on_trace is not None:
+            on_trace()
+        s = lax.axis_index("stage")
+        hot = (s >= F).astype(jnp.float32)            # stage mask (terminator)
+        my_blocks = jax.tree.map(lambda x: x[0], stage_blocks)
+        my_tokens, my_labels = tokens[0], labels[0]
+        backbone = {k: v for k, v in my_blocks.items() if k != "adapter"}
+        shared_rest = {k: v for k, v in shared.items() if k != "head"}
+        unstage = lambda t: jax.tree.map(lambda x: x[0], t)
+        restage = lambda t: jax.tree.map(lambda x: x[None], t)
+
+        # Embeddings are round-constant (outside the trainable set): embed +
+        # gather once, not once per owner-iteration.
+        seq = my_tokens.shape[2]
+        mb = my_tokens.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (mb, seq))
+        emb_g = pl.gather_embeddings(cfg, shared_rest, my_tokens, pos)
+
+        def owner_iter(carry, owner):
+            ad, head, m_ad, v_ad, m_hd, v_hd = carry
+
+            def local_loss(ad_, head_):
+                return local_round(owner, {**backbone, "adapter": ad_},
+                                   {**shared_rest, "head": head_},
+                                   emb_g, my_labels)
+
+            l_loc, (g_ad, g_hd) = jax.value_and_grad(
+                local_loss, argnums=(0, 1))(ad, head)
+            # head grads live only on the owner stage; psum replicates them
+            # (same semantics as differentiating a replicated P() input).
+            g_hd = jax.tree.map(lambda g: lax.psum(g, "stage"), g_hd)
+            ad2, m_ad2, v_ad2 = adamw.tree_update(
+                g_ad, m_ad, v_ad, ad, tc, lr=lr, mask=hot)
+            head2, m_hd2, v_hd2 = adamw.tree_update(
+                g_hd, m_hd, v_hd, head, tc, lr=lr)
+            return (ad2, head2, m_ad2, v_ad2, m_hd2, v_hd2), l_loc
+
+        init = (my_blocks["adapter"], shared["head"],
+                unstage(opt_state["m"]["adapter"]), unstage(opt_state["v"]["adapter"]),
+                opt_state["m"]["head"], opt_state["v"]["head"])
+        (ad, head, m_ad, v_ad, m_hd, v_hd), local_losses = lax.scan(
+            owner_iter, init, jnp.arange(S))
+        # each iteration's loss lives only on its owner stage; one vector psum
+        # per round replicates all S of them at once.
+        losses = lax.psum(local_losses, "stage")
+        mean_loss = jnp.mean(losses)
+
+        new_blocks = {**stage_blocks, "adapter": restage(ad)}
+        new_shared = {**shared, "head": head}
+        new_opt = {"m": {"adapter": restage(m_ad), "head": m_hd},
+                   "v": {"adapter": restage(v_ad), "head": v_hd},
+                   "count": opt_state["count"] + S}
+        return new_blocks, new_shared, new_opt, (losses, mean_loss)
+
+    opt_spec = ring_opt_specs()
+    return compat.shard_map(
+        fused, mesh=mesh,
+        in_specs=(P("stage"), P(), opt_spec, P("stage"), P("stage")),
+        out_specs=(P("stage"), P(), opt_spec, (P(), P())))
+
+
+class RingExecutor:
+    """Collaborative fine-tuning over a ring of ``n_stages`` devices — fused.
+
+    Drop-in upgrade of ``core/ring.py``'s ``RingTrainer``: same constructor,
+    same ``round(tokens, labels)`` / ``export_params()`` surface, but each
+    round is ONE donated executable instead of S dispatches + a host-side
+    optimizer loop, and ``round()`` never blocks on the host (metrics are
+    device arrays; see ``materialize_metrics``).
+
+    The unfreeze boundary is evaluated once per round (at the round's first
+    step).  When ``tc.unfreeze_interval`` is a multiple of ``n_stages`` this is
+    identical to the reference trainer's per-iteration evaluation; otherwise a
+    mid-round bump is deferred to the next round boundary.
+    """
+
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig, mesh: Mesh,
+                 params: Dict[str, Any], n_stages: int, n_micro: int, *,
+                 donate: bool = True):
+        assert len(cfg.pattern) == 1, "ring executor needs a uniform pattern"
+        self.cfg, self.tc, self.mesh = cfg, tc, mesh
+        self.S, self.M = n_stages, n_micro
+        self.lps = cfg.repeats // n_stages
+        self.stage_blocks, self.shared = pl.stage_stack(params, cfg, n_stages)
+        self._params_rest = {k: v for k, v in params.items()
+                             if k not in ("blocks",)}
+        self.opt_state = ring_opt_init(self.stage_blocks, self.shared)
+        self.sched = UnfreezeSchedule.from_train_config(tc)
+        self.donate = donate
+        self._fns: Dict[int, Any] = {}            # boundary -> jitted fused fn
+        self.trace_counts: Dict[int, int] = {}    # boundary -> #compilations
+        self.step = 0
+
+    # ------------------------------------------------------------------
+    def boundary_at(self, step: int) -> int:
+        depth = self.sched.depth_at(step, self.cfg.n_layers)
+        b = depth_to_boundary(self.cfg, depth)
+        return (b // self.lps) * self.lps          # stage-aligned (terminator)
+
+    def _fn(self, boundary: int):
+        if boundary not in self._fns:
+            self.trace_counts.setdefault(boundary, 0)
+
+            def bump(b=boundary):
+                self.trace_counts[b] += 1
+
+            fused = make_fused_round(self.cfg, self.tc, self.mesh,
+                                     n_stages=self.S, boundary=boundary,
+                                     n_micro=self.M, on_trace=bump)
+            donate = (0, 1, 2) if self.donate else ()
+            self._fns[boundary] = jax.jit(fused, donate_argnums=donate)
+        return self._fns[boundary]
+
+    @property
+    def n_executables(self) -> int:
+        return len(self._fns)
+
+    # ------------------------------------------------------------------
+    def round(self, tokens: Array, labels: Array) -> Dict[str, Any]:
+        """One training round: every client acts as initiator once.
+
+        tokens/labels: [S, M, mb, seq] per-client local data for this round.
+        Returns metrics as DEVICE arrays — no host sync.  Use
+        ``materialize_metrics`` (or ``float()``) at your logging interval.
+        """
+        boundary = self.boundary_at(self.step)
+        fn = self._fn(boundary)
+        (self.stage_blocks, self.shared, self.opt_state,
+         (losses, mean_loss)) = fn(
+            self.stage_blocks, self.shared, self.opt_state, tokens, labels)
+        self.step += self.S
+        return {"loss": mean_loss, "losses": losses,
+                "boundary": boundary, "step": self.step}
+
+    @staticmethod
+    def materialize_metrics(m: Dict[str, Any]) -> Dict[str, Any]:
+        """Host-sync a metrics dict (the once-per-logging-interval sync)."""
+        out: Dict[str, Any] = {}
+        for k, v in m.items():
+            if isinstance(v, jax.Array) and v.ndim == 0:
+                out[k] = float(v)
+            elif isinstance(v, jax.Array):
+                out[k] = [float(x) for x in v]
+            else:
+                out[k] = v
+        return out
+
+    # ------------------------------------------------------------------
+    def export_params(self) -> Dict[str, Any]:
+        return pl.unstack(self.stage_blocks, self.cfg, self._params_rest,
+                          self.shared)

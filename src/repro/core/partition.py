@@ -9,7 +9,6 @@ optimal for contiguous partitions with monotone per-device costs.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 

@@ -6,9 +6,8 @@ replicated copy of the embedding and head — exactly the paper's deployment.
 
 One *training round* (Algorithm 1, initiator = ``owner``):
 
-  1. The owner embeds its local microbatches and ships them to stage 0 with a single
-     static ``ppermute`` (paper: initiator sends embeddings to the client holding the
-     lowest Trm block).
+  1. The owner embeds its local microbatches and ships them to stage 0 (paper:
+     initiator sends embeddings to the client holding the lowest Trm block).
   2. **Phase A — frozen trunk, forward-only streaming**: stages ``[0, F)`` hold only
      frozen adapters (``F = boundary / Lps``). Their tick-pipeline runs entirely
      under ``stop_gradient``: ``M + F - 1`` ticks, never any backward — the paper's
@@ -18,10 +17,24 @@ One *training round* (Algorithm 1, initiator = ``owner``):
      ``ppermute`` yields the reverse-tick backward pipeline automatically (cotangents
      ppermute backwards along the ring), early-stopping at stage F — the paper's
      *terminator*.
-  4. The last stage's outputs return to the owner (static ppermute); the owner
-     computes the loss against its local labels (labels never leave their device),
-     the head gradient is ``psum``-shared, and adapter gradients stay local to their
-     stage — no weight-gradient traffic, matching the paper's communication pattern.
+  4. The last stage's outputs return to the owner; the owner computes the loss
+     against its local labels (labels never leave their device), the head gradient
+     is ``psum``-shared, and adapter gradients stay local to their stage — no
+     weight-gradient traffic, matching the paper's communication pattern.
+
+This module provides the ring *round* in two forms, split from the drivers that
+consume them (the executor split):
+
+  * ``make_ring_round`` / ``make_ring_train_round`` — the reference path: owner
+    is **static**, the owner->stage0 and last->owner hops are static ``ppermute``
+    tables, and each (owner, boundary) pair is its own executable.  Driven by
+    ``core/ring.py``'s ``RingTrainer`` (S executables per boundary, host-side
+    optimizer).
+  * ``ring_round_local`` — the fused path: owner is a **traced** scalar, the two
+    owner-dependent hops become ``all_gather`` + dynamic-index rotations (a
+    dynamic permute), so one executable serves every owner.
+    ``core/executor.py``'s ``RingExecutor`` scans this over all S owners and
+    runs the stage-masked optimizer *inside* a single donated jit.
 
 SPMD adaptation (DESIGN.md §6): per-device *program* asymmetry is impossible under
 SPMD, so the paper's per-device savings appear as globally shorter backward tick
@@ -37,7 +50,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, TrainConfig
+from repro import compat
+from repro.configs.base import ModelConfig
 from repro.models import transformer as tfm
 from repro.models.blocks import BlockCtx, apply_block
 
@@ -100,8 +114,32 @@ def _apply_stage_layers(cfg: ModelConfig, stage_params, h: Array,
     return h
 
 
+def _tick_phase(cfg: ModelConfig, s: Array, pos: Array, fwd_perm, n_micro: int,
+                blocks_slice, h_inject: Array, first_stage, depth: int) -> Array:
+    """Tick pipeline over stages [first, first+depth); returns the
+    [M, mb, seq, D] outputs emitted by stage first+depth-1 (stage-local:
+    only meaningful on that stage)."""
+    M = n_micro
+    T = M + depth - 1
+    rel = s - first_stage
+
+    def tick(carry, t):
+        buf = carry
+        inject = (rel == 0) & (t < M)
+        incoming = jnp.where(inject, h_inject[jnp.minimum(t, M - 1)], buf)
+        active = (rel >= 0) & (rel < depth) & (t - rel >= 0) & (t - rel < M)
+        out = _apply_stage_layers(cfg, blocks_slice, incoming, pos)
+        out = jnp.where(active, out, incoming)
+        nxt = lax.ppermute(out, "stage", fwd_perm)
+        return nxt, out
+
+    _, emits = lax.scan(tick, jnp.zeros_like(h_inject[0]), jnp.arange(T))
+    take = jnp.arange(M) + depth - 1
+    return emits[take]                                         # [M, mb, seq, D]
+
+
 # ---------------------------------------------------------------------------
-# One RingAda round as a shard_map'd, differentiable function
+# One RingAda round as a shard_map'd, differentiable function (static owner)
 # ---------------------------------------------------------------------------
 
 
@@ -136,27 +174,8 @@ def make_ring_round(cfg: ModelConfig, mesh: Mesh, *, n_stages: int, owner: int,
         shift0 = [(i, (i - owner) % n_stages) for i in range(n_stages)]
         emb_at0 = lax.ppermute(emb_all, "stage", shift0)
 
-        def phase(blocks_slice, h_inject, first_stage: int, depth: int):
-            """Tick pipeline over stages [first, first+depth); returns the
-            [M, mb, seq, D] outputs emitted by stage first+depth-1 (stage-local:
-            only meaningful on that stage)."""
-            T = M + depth - 1
-            rel = s - first_stage
-
-            def tick(carry, t):
-                buf = carry
-                inject = (rel == 0) & (t < M)
-                incoming = jnp.where(inject, h_inject[jnp.minimum(t, M - 1)], buf)
-                active = (rel >= 0) & (rel < depth) & (t - rel >= 0) & (t - rel < M)
-                out = _apply_stage_layers(cfg, blocks_slice, incoming, pos)
-                out = jnp.where(active, out, incoming)
-                nxt = lax.ppermute(out, "stage", fwd_perm)
-                return nxt, out
-
-            _, emits = lax.scan(tick, jnp.zeros_like(h_inject[0]),
-                                jnp.arange(T))
-            take = jnp.arange(M) + depth - 1
-            return emits[take]                                     # [M, mb, seq, D]
+        phase = lambda blocks_slice, h_inject, first, depth: _tick_phase(
+            cfg, s, pos, fwd_perm, M, blocks_slice, h_inject, first, depth)
 
         # 2. Phase A (forward-only streaming, no autodiff possible by construction)
         if F > 0:
@@ -182,9 +201,9 @@ def make_ring_round(cfg: ModelConfig, mesh: Mesh, *, n_stages: int, owner: int,
         loss = jnp.mean(lse - gold) * is_owner
         return lax.psum(loss, "stage")
 
-    return jax.shard_map(round_fn, mesh=mesh,
-                         in_specs=(P("stage"), P(), P("stage"), P("stage")),
-                         out_specs=P())
+    return compat.shard_map(round_fn, mesh=mesh,
+                            in_specs=(P("stage"), P(), P("stage"), P("stage")),
+                            out_specs=P())
 
 
 def make_ring_train_round(cfg: ModelConfig, mesh: Mesh, *, n_stages: int,
@@ -205,6 +224,98 @@ def make_ring_train_round(cfg: ModelConfig, mesh: Mesh, *, n_stages: int,
         return loss, grads
 
     return train_round
+
+
+# ---------------------------------------------------------------------------
+# One RingAda round as a *local* function with a traced owner (fused path)
+# ---------------------------------------------------------------------------
+
+
+def gather_embeddings(cfg: ModelConfig, shared: Dict[str, Any],
+                      my_tokens: Array, pos: Array) -> Array:
+    """All stages' embedded microbatches, gathered once per round.
+
+    The embedding table is outside RingAda's trainable set (adapters + head),
+    so within a round the embeddings are round-constant: the fused executor
+    hoists this single ``all_gather`` out of the owner scan instead of paying
+    an owner->stage0 hop per iteration.  Returns [S, M, mb, seq, D]."""
+    emb_all = jax.vmap(lambda t: tfm.embed(cfg, shared, t, pos))(my_tokens)
+    return lax.all_gather(emb_all, "stage")
+
+
+def ring_round_local(cfg: ModelConfig, *, n_stages: int, boundary: int,
+                     n_micro: int):
+    """Local (per-shard) RingAda round with a **traced** owner.
+
+    Returns ``fn(owner, my_blocks, shared, emb_g, my_labels) -> local_loss``
+    meant to be called *inside* an existing shard_map over 'stage' (arguments
+    already stage-local: my_blocks leaves [lps, C, ...]; ``emb_g`` is
+    ``gather_embeddings``' [S, M, mb, seq, D] round-constant embedding stack).
+
+    Owner enters as a traced i32 scalar, so ONE executable serves every owner
+    and the executor can ``lax.scan`` over owners inside a single jit.  The
+    owner-dependent static ppermute tables of ``make_ring_round`` become
+
+      * owner -> stage 0: a dynamic index into the pre-gathered embeddings
+        (stage j reads stage (j+owner)'s microbatches — a dynamic permute), and
+      * last stage -> owner: ``lax.switch`` over the S precomputed static
+        ppermute tables (all branches compile once; only the owner's executes).
+
+    The returned loss is the **local** masked contribution (nonzero only on the
+    owner stage), NOT psum'd: differentiate it directly — the collective
+    transposes (ppermute inverse, scatter-sum) route cotangents across stages
+    so the per-stage grads equal the reference path's.  psum the values (once
+    per round) and the head grads (once per iteration) afterwards.
+    """
+    R = cfg.repeats
+    lps = R // n_stages
+    assert boundary % lps == 0, f"boundary {boundary} not stage-aligned (lps={lps})"
+    F = boundary // lps
+    S = n_stages
+    S_hot = S - F
+    M = n_micro
+    fwd_perm = [(i, (i + 1) % S) for i in range(S)]
+    # stacked static tables: branch o ships stage S-1's outputs home to owner o
+    back_tables = [[(i, (i - (S - 1) + o) % S) for i in range(S)]
+                   for o in range(S)]
+
+    def local_fn(owner, my_blocks, shared, emb_g, my_labels):
+        s = lax.axis_index("stage")
+        mb, seq = my_labels.shape[1], my_labels.shape[2]
+        pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (mb, seq))
+
+        # 1. owner -> stage 0: stage j reads stage (j+owner)'s embeddings
+        emb_at0 = lax.dynamic_index_in_dim(emb_g, (s + owner) % S, 0,
+                                           keepdims=False)
+
+        phase = lambda blocks_slice, h_inject, first, depth: _tick_phase(
+            cfg, s, pos, fwd_perm, M, blocks_slice, h_inject, first, depth)
+
+        # 2. Phase A (frozen trunk, forward-only)
+        if F > 0:
+            outs_A = phase(lax.stop_gradient(my_blocks),
+                           lax.stop_gradient(emb_at0), 0, F)
+            outs_A = lax.stop_gradient(outs_A)
+            h_B = lax.ppermute(outs_A, "stage", fwd_perm)
+        else:
+            h_B = emb_at0
+
+        # 3. Phase B (hot 1F1B pipeline)
+        outs_B = phase(my_blocks, h_B, F, S_hot)
+
+        # 4. last stage -> owner: switch over the stacked static tables
+        finals = lax.switch(
+            owner,
+            [lambda h, t=tbl: lax.ppermute(h, "stage", t) for tbl in back_tables],
+            outs_B)
+        logits = jax.vmap(lambda hh: tfm.head(cfg, shared, hh))(finals)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(lf, my_labels[..., None], axis=-1)[..., 0]
+        is_owner = (s == owner).astype(jnp.float32)
+        return jnp.mean(lse - gold) * is_owner           # LOCAL (not psum'd)
+
+    return local_fn
 
 
 def pipeline_tick_counts(n_stages: int, n_micro: int, boundary: int, lps: int

@@ -1,19 +1,27 @@
-"""RingAda trainer: round-robin initiators + scheduled unfreezing (Algorithm 1).
+"""RingTrainer: the *reference* (unfused) RingAda driver (Algorithm 1).
 
-Drives the shard_map ring pipeline (core/pipeline.py) across training rounds:
+Executor split: this module keeps the paper's round-robin-initiator trainer in
+its original, easy-to-audit form — one executable per (owner, boundary) pair,
+optimizer on the host between dispatches — while ``core/executor.py``'s
+``RingExecutor`` is the production path that fuses the whole round (S
+owner-iterations + stage-masked AdamW) into one donated, jitted executable.
+Both share the ring round construction in ``core/pipeline.py`` and the
+optimizer math in ``optim/adamw.py`` (``leaf_update`` with no bias correction,
+constant lr), so they are numerically interchangeable; tests/test_executor.py
+pins that equivalence.  Keep this class as the oracle when touching either.
 
-  * the initiator rotates per round (paper: next initiator = best channel quality;
-    under a homogeneous ICI ring this degenerates to round-robin, which is also
-    what the paper's experiments use),
+Semantics (both drivers):
+
+  * the initiator rotates per round (paper: next initiator = best channel
+    quality; under a homogeneous ICI ring this degenerates to round-robin,
+    which is also what the paper's experiments use),
   * the coordinator-side unfreeze schedule bumps the depth every k steps,
-  * each (owner, boundary) pair compiles once and is cached (staged re-jit),
-  * adapter moments live stage-local (sharded with the adapters — optimizer state
-    never crosses the ring, like the paper), head moments are replicated.
+  * adapter moments live stage-local (sharded with the adapters — optimizer
+    state never crosses the ring, like the paper), head moments are replicated.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Iterator, List, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,20 +30,18 @@ from jax.sharding import Mesh
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.core import pipeline as pl
 from repro.core.unfreeze import UnfreezeSchedule, depth_to_boundary
+from repro.optim import adamw
 
 Array = jax.Array
 
 
-def _adam_update(g, m, v, p, lr, tc: TrainConfig, mask):
-    gf = g.astype(jnp.float32)
-    m2 = jnp.where(mask > 0, tc.beta1 * m + (1 - tc.beta1) * gf, m)
-    v2 = jnp.where(mask > 0, tc.beta2 * v + (1 - tc.beta2) * gf * gf, v)
-    upd = m2 / (jnp.sqrt(v2) + tc.eps) + tc.weight_decay * p.astype(jnp.float32)
-    return m2, v2, (p.astype(jnp.float32) - lr * upd * mask).astype(p.dtype)
-
-
 class RingTrainer:
-    """Collaborative fine-tuning over a ring of ``n_stages`` devices."""
+    """Collaborative fine-tuning over a ring of ``n_stages`` devices.
+
+    Reference implementation: S jit dispatches per round, host-side optimizer,
+    one ``float(loss)`` sync per iteration.  Use ``core.executor.RingExecutor``
+    for the fused single-dispatch round.
+    """
 
     def __init__(self, cfg: ModelConfig, tc: TrainConfig, mesh: Mesh,
                  params: Dict[str, Any], n_stages: int, n_micro: int):
@@ -46,12 +52,8 @@ class RingTrainer:
         self.stage_blocks, self.shared = pl.stage_stack(params, cfg, n_stages)
         self._params_rest = {k: v for k, v in params.items()
                              if k not in ("blocks",)}
-        zeros = lambda t: jax.tree.map(
-            lambda x: jnp.zeros(x.shape, jnp.float32), t)
-        self.m_ad = zeros(self.stage_blocks["adapter"])
-        self.v_ad = zeros(self.stage_blocks["adapter"])
-        self.m_hd = zeros(self.shared["head"])
-        self.v_hd = zeros(self.shared["head"])
+        self.m_ad, self.v_ad = adamw.init_moments(self.stage_blocks["adapter"])
+        self.m_hd, self.v_hd = adamw.init_moments(self.shared["head"])
         self.sched = UnfreezeSchedule.from_train_config(tc)
         self._round_fns: Dict[Tuple[int, int], Any] = {}
         self.step = 0
@@ -70,6 +72,12 @@ class RingTrainer:
                 boundary=boundary, n_micro=self.M)
             self._round_fns[key] = jax.jit(fn)
         return self._round_fns[key]
+
+    @property
+    def n_executables(self) -> int:
+        """One per (owner, boundary) pair — S x boundaries (the fused executor
+        needs one per boundary)."""
+        return len(self._round_fns)
 
     # ------------------------------------------------------------------
     def round(self, tokens: Array, labels: Array) -> Dict[str, float]:
@@ -98,7 +106,7 @@ class RingTrainer:
             stage_ids = jnp.arange(self.S).reshape(
                 (self.S,) + (1,) * (p.ndim - 1))
             mask = (stage_ids >= F).astype(jnp.float32)
-            return _adam_update(g, m, v, p, lr, self.tc, mask)
+            return adamw.leaf_update(g, m, v, p, lr=lr, tc=self.tc, mask=mask)
 
         trip = jax.tree.map(upd_ad, g_ad, self.m_ad, self.v_ad,
                             self.stage_blocks["adapter"])
@@ -109,8 +117,7 @@ class RingTrainer:
         self.stage_blocks = {**self.stage_blocks, "adapter": new_ad}
 
         trip_h = jax.tree.map(
-            lambda g, m, v, p: _adam_update(g, m, v, p, lr, self.tc,
-                                            jnp.float32(1.0)),
+            lambda g, m, v, p: adamw.leaf_update(g, m, v, p, lr=lr, tc=self.tc),
             g_hd, self.m_hd, self.v_hd, self.shared["head"])
         self.m_hd = jax.tree.map(lambda t: t[0], trip_h, is_leaf=is_t)
         self.v_hd = jax.tree.map(lambda t: t[1], trip_h, is_leaf=is_t)

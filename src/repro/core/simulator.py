@@ -19,12 +19,10 @@ the quantities of the paper's Table I and Fig. 3(b).
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.partition import DeviceProfile, assign_layers, uniform_assignment
+from repro.core.partition import DeviceProfile, uniform_assignment
 
 
 @dataclass(frozen=True)

@@ -13,9 +13,8 @@ depth change triggers one (cached) recompile — amortized over >= k steps.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Iterator, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 from repro.configs.base import ModelConfig, TrainConfig
 

@@ -21,7 +21,6 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels import ref
 
 
 def _act(name: str):

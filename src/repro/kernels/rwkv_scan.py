@@ -22,7 +22,6 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import ref
 
 
 def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, out_ref, sT_ref,

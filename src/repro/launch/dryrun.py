@@ -20,18 +20,16 @@ import argparse
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro import roofline as rl
 from repro.configs import INPUT_SHAPES, ASSIGNED, TrainConfig, get_config, shape_runnable
 from repro.core import training
 from repro.launch import inputs as inp
 from repro.launch.mesh import make_production_mesh
-from repro.models import params as prm
 
 
 def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
@@ -57,7 +55,7 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
     tc = TrainConfig()
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if shape.kind == "train":
             batch, bspecs = inp.train_inputs(cfg, shape, mesh)
             ospecs = inp.opt_state_specs(cfg, mesh)
@@ -99,7 +97,7 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
         t_compile = time.time() - t0
 
     ma = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     hlo = compiled.as_text()
     coll = rl.collective_bytes(hlo)
     mf = rl.model_flops(cfg, shape)

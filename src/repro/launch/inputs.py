@@ -9,8 +9,7 @@ Stubbed frontends (the one allowed carve-out): for ``vlm`` / ``audio`` archs the
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

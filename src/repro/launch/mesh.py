@@ -2,23 +2,27 @@
 
 Defined as FUNCTIONS (never module-level constants) so importing this module never
 touches jax device state — the dry-run must set XLA_FLAGS before first jax init.
+All mesh construction goes through ``repro.compat`` so the same code runs on
+jax lines with and without ``AxisType`` / ``jax.set_mesh``.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """Single pod: (data=16, model=16) = 256 chips; multi-pod adds pod=2 => 512."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_ring_mesh(n_stages: int) -> Mesh:
     """Ring-pipeline mesh over the 'stage' axis (CPU demos / tests)."""
-    return jax.make_mesh((n_stages,), ("stage",), axis_types=(AxisType.Auto,))
+    return compat.make_mesh((n_stages,), ("stage",))
 
 
 def require_devices(n: int) -> None:

@@ -14,14 +14,13 @@ from __future__ import annotations
 import argparse
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import training
 from repro.models import params as prm
 from repro.models import transformer as tfm
 

@@ -5,7 +5,10 @@ Two execution modes:
     training with the static unfreeze boundary (staged re-jit per depth change).
   * ``--mode ring``: shard_map ring pipeline across ``--stages`` devices with
     rotating initiators (needs >= stages local devices, e.g.
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``).
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``).  The default ring
+    driver is the fused ``RingExecutor`` (one donated executable per boundary,
+    no per-iteration host sync); ``--trainer reference`` selects the unfused
+    ``RingTrainer`` oracle.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.train --arch mbert-squad --steps 120 \
@@ -83,32 +86,76 @@ def train_pjit(cfg, tc: TrainConfig, *, steps: int, log_every: int = 10,
 
 
 def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
-               log_every: int = 1, log=print) -> Dict[str, Any]:
+               log_every: int = 1, trainer: str = "fused",
+               log=print) -> Dict[str, Any]:
+    """Ring-pipeline training across ``n_stages`` devices.
+
+    trainer='fused' (default): ``RingExecutor`` — the whole round (S
+    owner-iterations + optimizer) is one donated executable and metrics stay on
+    device between logging intervals (async dispatch: the host never blocks
+    mid-interval).  trainer='reference': the unfused ``RingTrainer`` oracle.
+    """
+    from repro import compat
+    from repro.core.executor import RingExecutor
     from repro.core.ring import RingTrainer
     from repro.launch.mesh import make_ring_mesh, require_devices
 
+    if trainer not in ("fused", "reference"):
+        raise ValueError(f"trainer must be 'fused' or 'reference', "
+                         f"got {trainer!r}")
     require_devices(n_stages)
+    if cfg.head_out is not None:
+        raise ValueError(
+            f"ring mode trains with the LM objective, but this config has a "
+            f"task head (head_out={cfg.head_out}) — the loss would be "
+            f"garbage/NaN. Use an LM config, or reduce with head_out=None "
+            f"like examples/ring_finetune.py.")
+    if cfg.repeats % n_stages != 0:
+        raise ValueError(
+            f"ring training needs repeats divisible by stages: "
+            f"cfg.repeats={cfg.repeats}, --stages {n_stages}. Pick --stages "
+            f"from the divisors of {cfg.repeats}, or a config/--reduced "
+            f"variant with more repeats.")
     mesh = make_ring_mesh(n_stages)
     key = jax.random.key(tc.seed)
     params = prm.materialize(prm.param_defs(cfg), key, cfg.dtype)
-    trainer = RingTrainer(cfg, tc, mesh, params, n_stages, tc.n_microbatches)
+    cls = RingExecutor if trainer == "fused" else RingTrainer
+    drv = cls(cfg, tc, mesh, params, n_stages, tc.n_microbatches)
     clients = make_client_datasets(n_stages, vocab=cfg.vocab_size,
                                    n_per_client=128, seq=tc.seq_len,
                                    seed=tc.seed)
     rb = RingBatcher(clients, tc.n_microbatches, tc.batch_size, seed=tc.seed)
 
     history = []
+    pending = []          # fused path: device-array metrics awaiting host sync
     t0 = time.time()
-    with jax.set_mesh(mesh):
+
+    def flush():
+        for m in pending:
+            m2 = RingExecutor.materialize_metrics(m)
+            m2["wall_s"] = round(time.time() - t0, 2)
+            history.append(m2)
+        pending.clear()
+
+    with compat.set_mesh(mesh):
         for r in range(rounds):
             tokens, labels = rb.next()
-            m = trainer.round(tokens, labels)
-            m["wall_s"] = round(time.time() - t0, 2)
-            history.append(m)
-            if r % log_every == 0:
-                log(f"round {r:4d} loss={m['loss']:.4f} "
-                    f"boundary={m['boundary']} ({m['wall_s']}s)")
-    return {"history": history, "trainer": trainer,
+            m = drv.round(tokens, labels)
+            if trainer == "fused":
+                pending.append(m)
+                if r % log_every == 0 or r == rounds - 1:
+                    flush()                  # one host sync per interval
+                    h = history[-1]
+                    log(f"round {r:4d} loss={h['loss']:.4f} "
+                        f"boundary={h['boundary']} ({h['wall_s']}s)")
+            else:
+                m["wall_s"] = round(time.time() - t0, 2)
+                history.append(m)
+                if r % log_every == 0:
+                    log(f"round {r:4d} loss={m['loss']:.4f} "
+                        f"boundary={m['boundary']} ({m['wall_s']}s)")
+        flush()
+    return {"history": history, "trainer": drv,
             "wall_s": time.time() - t0}
 
 
@@ -118,6 +165,10 @@ def main() -> None:
     ap.add_argument("--mode", choices=["pjit", "ring"], default="pjit")
     ap.add_argument("--scheme", choices=["ringada", "all_hot"],
                     default="ringada")
+    ap.add_argument("--trainer", choices=["fused", "reference"],
+                    default="fused",
+                    help="ring driver: fused RingExecutor or the unfused "
+                         "RingTrainer oracle")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--rounds", type=int, default=25)
     ap.add_argument("--stages", type=int, default=4)
@@ -140,7 +191,8 @@ def main() -> None:
         out = train_pjit(cfg, tc, steps=args.steps, scheme=args.scheme,
                          save_path=args.save)
     else:
-        out = train_ring(cfg, tc, rounds=args.rounds, n_stages=args.stages)
+        out = train_ring(cfg, tc, rounds=args.rounds, n_stages=args.stages,
+                         trainer=args.trainer)
     print(json.dumps(out["history"][-1], default=float))
 
 

@@ -18,10 +18,8 @@ attention-sink slots (Hymba meta tokens).
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -18,8 +18,7 @@ never evicted — Hymba meta tokens act as attention sinks); full-attention arch
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ repeats from the bottom; unfreeze depth ``d`` maps to ``boundary = R - d``.)
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

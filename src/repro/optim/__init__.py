@@ -1,1 +1,12 @@
-"""repro.optim"""
+"""repro.optim — shared optimizer interface.
+
+``adamw`` exposes the one masked-AdamW implementation used by every training
+path: the fused ring executor (in-jit, stage-masked), the reference ring
+trainer, and the pjit trainer (boundary row mask + warmup + bias correction).
+"""
+from repro.optim import adamw
+from repro.optim.adamw import (init, init_moments, leaf_update, lr_at,
+                               opt_state_bytes, tree_update, update)
+
+__all__ = ["adamw", "init", "init_moments", "leaf_update", "lr_at",
+           "opt_state_bytes", "tree_update", "update"]

@@ -1,19 +1,31 @@
-"""PEFT-masked AdamW.
+"""PEFT-masked AdamW — the one optimizer implementation every path shares.
 
 Optimizer state exists only for the paper's trainable set (adapters + head) — this
 is the memory advantage RingAda inherits from adapter fine-tuning: for a 7B backbone
 the moments cover ~2% of parameters.
 
-Moments for the adapter stacks are kept *full-size* ``[R, ...]`` so the optimizer
-state pytree is stable while the unfreeze boundary moves; rows below the boundary are
-frozen with a static row mask (their gradients are exactly zero anyway, but the mask
-also stops weight decay and moment decay from touching them — the paper updates only
-unfrozen adapters).
+Three layers of API, all built on the same leaf math (``leaf_update``):
+
+  * ``leaf_update`` / ``init_moments`` / ``tree_update`` — the shared masked-Adam
+    primitive.  Used directly by the fused ring executor (``core/executor.py``),
+    which runs the update *inside* its jitted, donated step with a stage mask,
+    and by the reference ``RingTrainer`` (``core/ring.py``).
+  * ``init`` / ``update`` — the pjit-path API over the full trainable tree
+    (``core/training.py``, ``launch/train.py``): bias-corrected, warmup lr, row
+    mask below the unfreeze boundary.
+  * ``lr_at`` — the warmup schedule, shared by both.
+
+Masking semantics (paper: only unfrozen adapters are updated): where the mask is
+zero, the moments do not decay and the parameter does not move — a frozen row is
+bit-identical before and after the step, not merely "gradient-zero".
+
+Moments for the adapter stacks are kept *full-size* ``[R, ...]`` (pjit path) or
+stage-stacked ``[S, lps, ...]`` (ring path) so the optimizer-state pytree is
+stable while the unfreeze boundary moves.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +33,7 @@ import jax.numpy as jnp
 from repro.configs.base import TrainConfig
 
 Array = jax.Array
+MaskLike = Union[None, Array, float, Callable[[Array], Any]]
 
 
 def lr_at(tc: TrainConfig, step: Array) -> Array:
@@ -29,12 +42,77 @@ def lr_at(tc: TrainConfig, step: Array) -> Array:
     return tc.learning_rate * warm
 
 
-def init(trainable_full: Any) -> Dict[str, Any]:
-    """trainable_full: the *full* (boundary=0) trainable tree."""
+# ---------------------------------------------------------------------------
+# Shared masked-Adam primitive
+# ---------------------------------------------------------------------------
+
+
+def init_moments(tree: Any) -> Tuple[Any, Any]:
+    """(m, v) float32 zeros shaped like ``tree``."""
     zeros = lambda t: jax.tree.map(
         lambda x: jnp.zeros(x.shape, jnp.float32), t)
-    return {"m": zeros(trainable_full), "v": zeros(trainable_full),
-            "count": jnp.zeros((), jnp.int32)}
+    return zeros(tree), zeros(tree)
+
+
+def leaf_update(g: Array, m: Array, v: Array, p: Array, *, lr, tc: TrainConfig,
+                mask: MaskLike = None,
+                bias_correction: Optional[Tuple[Array, Array]] = None,
+                ) -> Tuple[Array, Array, Array]:
+    """One masked AdamW update on a single leaf -> (m2, v2, p2).
+
+    ``mask`` broadcasts against the leaf; where it is zero neither the moments
+    nor the parameter move.  ``bias_correction=(bc1, bc2)`` enables the
+    bias-corrected form (pjit path); ``None`` is the raw form the ring paths
+    use (constant lr, no correction — the paper's per-client update).
+    """
+    gf = g.astype(jnp.float32)
+    mk = jnp.float32(1.0) if mask is None else mask
+    m2 = jnp.where(mk > 0, tc.beta1 * m + (1 - tc.beta1) * gf, m)
+    v2 = jnp.where(mk > 0, tc.beta2 * v + (1 - tc.beta2) * gf * gf, v)
+    if bias_correction is None:
+        mhat, vhat = m2, v2
+    else:
+        mhat, vhat = m2 / bias_correction[0], v2 / bias_correction[1]
+    upd = mhat / (jnp.sqrt(vhat) + tc.eps) + tc.weight_decay * p.astype(jnp.float32)
+    p2 = (p.astype(jnp.float32) - lr * upd * mk).astype(p.dtype)
+    return m2, v2, p2
+
+
+def _unzip3(trip: Any) -> Tuple[Any, Any, Any]:
+    is_t = lambda x: isinstance(x, tuple)
+    pick = lambda i: jax.tree.map(lambda t: t[i], trip, is_leaf=is_t)
+    return pick(0), pick(1), pick(2)
+
+
+def tree_update(grads: Any, m: Any, v: Any, params: Any, tc: TrainConfig, *,
+                lr, mask: MaskLike = None,
+                bias_correction: Optional[Tuple[Array, Array]] = None,
+                ) -> Tuple[Any, Any, Any]:
+    """Masked AdamW over a pytree -> (new_params, new_m, new_v).
+
+    ``mask`` is either broadcastable against every leaf (e.g. the executor's
+    scalar stage mask) or a callable ``leaf -> mask`` (e.g. the pjit path's
+    per-leaf row mask).
+    """
+    mask_fn = mask if callable(mask) else (lambda _leaf: mask)
+    trip = jax.tree.map(
+        lambda g, mi, vi, pi: leaf_update(g, mi, vi, pi, lr=lr, tc=tc,
+                                          mask=mask_fn(pi),
+                                          bias_correction=bias_correction),
+        grads, m, v, params)
+    m2, v2, p2 = _unzip3(trip)
+    return p2, m2, v2
+
+
+# ---------------------------------------------------------------------------
+# pjit-path API (full trainable tree, boundary row mask, warmup + bias corr.)
+# ---------------------------------------------------------------------------
+
+
+def init(trainable_full: Any) -> Dict[str, Any]:
+    """trainable_full: the *full* (boundary=0) trainable tree."""
+    m, v = init_moments(trainable_full)
+    return {"m": m, "v": v, "count": jnp.zeros((), jnp.int32)}
 
 
 def _pad_adapters(grads_sliced: Any, boundary: int) -> Any:
@@ -51,7 +129,7 @@ def _pad_adapters(grads_sliced: Any, boundary: int) -> Any:
 def update(grads: Dict[str, Any], opt_state: Dict[str, Any],
            trainable_full: Dict[str, Any], tc: TrainConfig, boundary: int,
            ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
-    """One AdamW step.
+    """One AdamW step (pjit path).
 
     grads: {"adapters": tuple of sliced [R-b,...] trees, "head": ...}
     trainable_full / opt_state moments: full-size trees.
@@ -62,11 +140,9 @@ def update(grads: Dict[str, Any], opt_state: Dict[str, Any],
               "head": grads["head"]}
 
     count = opt_state["count"] + 1
-    b1, b2, eps = tc.beta1, tc.beta2, tc.eps
     lr = lr_at(tc, count)
     c = count.astype(jnp.float32)
-    bc1 = 1.0 - b1 ** c
-    bc2 = 1.0 - b2 ** c
+    bc = (1.0 - tc.beta1 ** c, 1.0 - tc.beta2 ** c)
 
     def row_mask(x):
         if boundary == 0:
@@ -74,42 +150,22 @@ def update(grads: Dict[str, Any], opt_state: Dict[str, Any],
         mask = (jnp.arange(x.shape[0]) >= boundary).astype(jnp.float32)
         return mask.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
 
-    def leaf(path_is_adapter):
-        def f(g, m, v, p):
-            gf = g.astype(jnp.float32)
-            mask = row_mask(g) if path_is_adapter else jnp.float32(1.0)
-            m2 = jnp.where(mask > 0, b1 * m + (1 - b1) * gf, m)
-            v2 = jnp.where(mask > 0, b2 * v + (1 - b2) * gf * gf, v)
-            upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
-            upd = upd + tc.weight_decay * p.astype(jnp.float32)
-            new_p = p.astype(jnp.float32) - lr * upd * mask
-            return m2, v2, new_p.astype(p.dtype)
-        return f
-
-    new_state: Dict[str, Any] = {"count": count}
-    new_trainable: Dict[str, Any] = {}
-
-    # adapters (per pattern entry)
-    fa = leaf(True)
     m_out, v_out, p_out = [], [], []
     for gi, mi, vi, pi in zip(g_full["adapters"], opt_state["m"]["adapters"],
                               opt_state["v"]["adapters"],
                               trainable_full["adapters"]):
-        trip = jax.tree.map(fa, gi, mi, vi, pi)
-        m_out.append(jax.tree.map(lambda t: t[0], trip, is_leaf=lambda x: isinstance(x, tuple)))
-        v_out.append(jax.tree.map(lambda t: t[1], trip, is_leaf=lambda x: isinstance(x, tuple)))
-        p_out.append(jax.tree.map(lambda t: t[2], trip, is_leaf=lambda x: isinstance(x, tuple)))
-    # head
-    fh = leaf(False)
-    trip_h = jax.tree.map(fh, g_full["head"], opt_state["m"]["head"],
-                          opt_state["v"]["head"], trainable_full["head"])
-    is_t = lambda x: isinstance(x, tuple)
-    new_state["m"] = {"adapters": tuple(m_out),
-                      "head": jax.tree.map(lambda t: t[0], trip_h, is_leaf=is_t)}
-    new_state["v"] = {"adapters": tuple(v_out),
-                      "head": jax.tree.map(lambda t: t[1], trip_h, is_leaf=is_t)}
-    new_trainable = {"adapters": tuple(p_out),
-                     "head": jax.tree.map(lambda t: t[2], trip_h, is_leaf=is_t)}
+        pe, me, ve = tree_update(gi, mi, vi, pi, tc, lr=lr, mask=row_mask,
+                                 bias_correction=bc)
+        m_out.append(me)
+        v_out.append(ve)
+        p_out.append(pe)
+    ph, mh, vh = tree_update(g_full["head"], opt_state["m"]["head"],
+                             opt_state["v"]["head"], trainable_full["head"],
+                             tc, lr=lr, bias_correction=bc)
+    new_state = {"count": count,
+                 "m": {"adapters": tuple(m_out), "head": mh},
+                 "v": {"adapters": tuple(v_out), "head": vh}}
+    new_trainable = {"adapters": tuple(p_out), "head": ph}
     return new_trainable, new_state
 
 

@@ -21,10 +21,9 @@ dry-runs use single-scan programs (boundary=0 / serve steps) which are unaffecte
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, List, Tuple
 
 from repro.configs.base import InputShape, ModelConfig
 

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 from typing import Dict, Optional, Sequence, Tuple, Union
 
-import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 MeshAxes = Union[None, str, Tuple[str, ...]]

@@ -41,16 +41,19 @@ def test_prefill_decode_matches_forward(name):
 def test_prefill_decode_matches_forward_moe(name):
     # MoE decode can legitimately differ where full-seq routing dropped tokens
     # (capacity) — tolerance covers the gate-weighted expert output delta.
+    # The prefill comparison sees the same effect (capacity is computed over
+    # S-1 vs S tokens), so it gets a wider budget than the dense variant too.
     cfg, params, tokens, kw = _setup(name)
     S = tokens.shape[1]
     full, _ = tfm.forward(params, tokens, cfg, **kw)
     pl, cache = tfm.prefill(params, tokens[:, :S - 1], cfg, seq_len=256, **kw)
     dl, _ = tfm.decode_step(params, tokens[:, S - 1:S], cache, cfg)
     f32 = lambda x: x.astype(jnp.float32)
-    assert jnp.allclose(f32(pl), f32(full[:, S - 2]), atol=2e-2)
+    assert jnp.allclose(f32(pl), f32(full[:, S - 2]), atol=5e-2)
     assert jnp.allclose(f32(dl), f32(full[:, S - 1]), atol=0.5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ["qwen2.5-3b", "hymba-1.5b", "rwkv6-7b"])
 def test_multistep_greedy_decode_matches_forward(name):
     """Greedy continuation via cache == greedy continuation via re-forward."""

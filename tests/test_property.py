@@ -5,6 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (see requirements-dev.txt); "
+           "skipping must not break collection of the rest of the suite")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
@@ -72,7 +77,7 @@ def test_prefill_fill_positions_match_write_order(sp, window):
        k=st.integers(1, 3), seed=st.integers(0, 10_000))
 @settings(**SETTINGS)
 def test_moe_dispatch_invariants(T, E, k, seed):
-    from repro.configs.base import MoEConfig, ModelConfig, AdapterConfig
+    from repro.configs.base import MoEConfig, ModelConfig
     cfg = ModelConfig(name=f"t{seed}", family="moe", n_layers=1, d_model=16,
                       n_heads=2, n_kv_heads=2, d_ff=32, vocab_size=64,
                       pattern=(("moe", 1),),

@@ -1,6 +1,5 @@
 """The trace-based simulator must reproduce the paper's qualitative Table I:
 RingAda < PipeAdapter < Single on both time and memory."""
-import pytest
 
 from repro.core.partition import DeviceProfile
 from repro.core.simulator import (LayerProfile, SimConfig, simulate_round,

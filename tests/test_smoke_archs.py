@@ -61,6 +61,7 @@ def test_train_step_no_nan(name):
     assert jnp.array_equal(params["embed"]["tok"], p2["embed"]["tok"])
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ["stablelm-3b", "olmoe-1b-7b", "rwkv6-7b",
                                   "hymba-1.5b"])
 def test_two_steps_loss_finite_and_decreasing_grads(name):

@@ -8,8 +8,7 @@ import pytest
 
 from repro.configs import TrainConfig, get_config
 from repro.core import training
-from repro.data.pipeline import (Batcher, RingBatcher, make_client_datasets,
-                                 merged)
+from repro.data.pipeline import Batcher, RingBatcher, make_client_datasets
 from repro.checkpoint import checkpoint as ckpt
 from repro.models import params as prm
 from repro.optim import adamw
@@ -49,6 +48,7 @@ def test_adamw_row_masking():
     assert float(jnp.abs(new_opt["m"]["adapters"][0]["w_down"][:b]).max()) == 0
 
 
+@pytest.mark.slow
 def test_adamw_state_stable_across_boundaries():
     cfg, params = _tiny()
     opt = adamw.init(training.full_trainable(params))

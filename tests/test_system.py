@@ -2,12 +2,10 @@
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import TrainConfig, get_config
-from repro.core import training
 from repro.core.unfreeze import boundary_schedule, UnfreezeSchedule
 from repro.launch.train import train_pjit
 from repro.models import params as prm
