@@ -1,14 +1,21 @@
 """Ring-pipeline benchmark.
 
 Three sections:
-  1. analytic tick counts per unfreeze depth,
+  1. analytic tick counts per unfreeze depth (incl. the cached Phase-A skip),
   2. simulated round time + utilization (discrete-event MPMD model),
-  3. **fused-vs-reference**: real wall-clock steps/sec, executable counts and
-     per-executable memory (incl. donation aliasing) for the fused
-     ``RingExecutor`` against the unfused ``RingTrainer`` on a 4-(host-)device
-     ring.  Runs in a subprocess so the parent process keeps its 1-device
-     backend; invoke directly with ``python benchmarks/pipeline_bench.py`` or
-     through ``benchmarks/run.py``.
+  3. **fused-vs-reference-vs-cached**: real wall-clock steps/sec, executable
+     counts and per-executable memory (incl. donation aliasing) for the fused
+     ``RingExecutor`` against the unfused ``RingTrainer``, plus the
+     frozen-trunk activation cache's steady state (Phase A skipped) at the
+     highest scheduled boundary, on a 4-(host-)device ring.  Runs in a
+     subprocess so the parent process keeps its 1-device backend; invoke
+     directly with ``python benchmarks/pipeline_bench.py`` or through
+     ``benchmarks/run.py``.
+
+Emits ``BENCH_ring.json`` (machine-readable; ``--out`` overrides the path) so
+the steady-state perf trajectory — reference vs PR-1 fused vs cached, cache
+hit rate, per-boundary compile counts — is tracked across PRs.  CI uploads it
+as a workflow artifact.
 """
 from __future__ import annotations
 
@@ -16,9 +23,10 @@ import json
 import os
 import subprocess
 import sys
-from typing import Dict
+from typing import Dict, Optional
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(ROOT, "BENCH_ring.json")
 
 _FUSED_SCRIPT = r"""
 import os, time, json
@@ -94,6 +102,35 @@ with compat.set_mesh(mesh):
             rec["device_peak_bytes"] = stats["peak_bytes_in_use"]
         out.setdefault("steady", {})[name] = rec
 
+    # 3. actcache steady state at the highest scheduled boundary (F = S-1):
+    #    epoch 0 captures each slot's boundary activations, every later epoch
+    #    enters the pipeline at stage F (no embed / all_gather / Phase A).
+    N_SLOTS = 2
+    drv = RingExecutor(cfg, tc_fix, mesh, fresh_params(), S, M,
+                       cache_capacity=N_SLOTS)
+    t0 = time.time()
+    for sl in range(N_SLOTS):
+        drv.round(tokens, labels, slot=sl)       # capture epoch (+compile)
+    last = drv.round(tokens, labels, slot=0)     # first hit: compile cached
+    sync(last)
+    compile_s = time.time() - t0
+    t0 = time.time()
+    for r in range(ROUNDS):
+        last = drv.round(tokens, labels, slot=r % N_SLOTS)
+    sync(last)
+    dt = time.time() - t0
+    stats = drv.cache.stats()
+    out["steady"]["cached"] = {
+        "steps_per_sec": S * ROUNDS / dt, "compile_s": compile_s,
+        "round_ms": 1e3 * dt / ROUNDS,
+        "n_executables": drv.n_executables,
+        "boundary": drv.boundary_at(0),
+        "cache_hit_rate": stats["cache_hit_rate"],
+        "cache_hits": stats["cache_hits"],
+        "cache_misses": stats["cache_misses"],
+        "compile_counts": drv.compile_counts(),
+    }
+
     # per-executable memory analysis: the fused step aliases (donates) params +
     # moments; the reference path re-materializes grads/outputs per dispatch
     # and runs its optimizer un-donated on the host.
@@ -128,6 +165,8 @@ out["speedup"] = (out["schedule"]["fused"]["steps_per_sec"]
                   / out["schedule"]["reference"]["steps_per_sec"])
 out["steady_speedup"] = (out["steady"]["fused"]["steps_per_sec"]
                          / out["steady"]["reference"]["steps_per_sec"])
+out["cached_speedup_vs_fused"] = (out["steady"]["cached"]["steps_per_sec"]
+                                  / out["steady"]["fused"]["steps_per_sec"])
 print(json.dumps(out))
 """
 
@@ -149,7 +188,7 @@ def bench_fused_vs_reference(log=print) -> Dict:
         log(f"  schedule {name:9s}: {r['steps_per_sec']:6.2f} steps/s "
             f"end-to-end ({r['wall_s']:.1f}s, {r['n_executables']} "
             f"executables over all boundaries)")
-    for name in ("reference", "fused"):
+    for name in ("reference", "fused", "cached"):
         r = out["steady"][name]
         log(f"  steady   {name:9s}: {r['steps_per_sec']:6.2f} steps/s "
             f"({r['round_ms']:.0f} ms/round, compile {r['compile_s']:.1f}s, "
@@ -160,12 +199,58 @@ def bench_fused_vs_reference(log=print) -> Dict:
             log(f"  {key.split('_')[0]:9s} executable: "
                 f"peak={fm['peak_bytes'] / 2**20:.1f} MiB "
                 f"(donation aliases {fm['alias_bytes'] / 2**20:.1f} MiB)")
+    c = out["steady"]["cached"]
+    log(f"  actcache: hit rate {c['cache_hit_rate']:.0%} at boundary "
+        f"{c['boundary']}, compiles {c['compile_counts']}")
     log(f"  speedup: {out['speedup']:.2f}x end-to-end, "
-        f"{out['steady_speedup']:.2f}x steady-state")
+        f"{out['steady_speedup']:.2f}x steady-state fused-vs-reference, "
+        f"{out['cached_speedup_vs_fused']:.2f}x steady-state cached-vs-fused")
     return out
 
 
-def run(log=print) -> Dict:
+def write_bench_ring(out: Dict, path: str, log=print) -> Optional[Dict]:
+    """Condense the fused-vs-reference-vs-cached section into BENCH_ring.json.
+
+    Machine-readable perf trajectory (tracked across PRs, uploaded by CI):
+    steady-state steps/sec for reference / PR-1 fused / cached, the cache hit
+    rate, and per-boundary compile counts.
+    """
+    fvr = out.get("fused_vs_reference", {})
+    if "steady" not in fvr:
+        log(f"  BENCH_ring.json NOT written ({path}): bench skipped "
+            f"({fvr.get('skipped', 'no data')[:200]})")
+        return None
+    steady = fvr["steady"]
+    cached = steady["cached"]
+    bench = {
+        "schema": "BENCH_ring/v1",
+        "mesh_devices": 4,
+        "boundary": cached["boundary"],
+        "steady_steps_per_sec": {
+            name: steady[name]["steps_per_sec"]
+            for name in ("reference", "fused", "cached")},
+        "steady_round_ms": {
+            name: steady[name]["round_ms"]
+            for name in ("reference", "fused", "cached")},
+        "speedup_fused_vs_reference": fvr["steady_speedup"],
+        "speedup_cached_vs_fused": fvr["cached_speedup_vs_fused"],
+        "speedup_schedule_fused_vs_reference": fvr["speedup"],
+        "cache_hit_rate": cached["cache_hit_rate"],
+        "compile_counts": cached["compile_counts"],
+        "n_executables": {
+            name: steady[name]["n_executables"]
+            for name in ("reference", "fused", "cached")},
+    }
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=1, sort_keys=True)
+        f.write("\n")
+    log(f"  wrote {path}: cached {bench['steady_steps_per_sec']['cached']:.2f} "
+        f"steps/s = {bench['speedup_cached_vs_fused']:.2f}x fused "
+        f"({bench['cache_hit_rate']:.0%} hit rate)")
+    return bench
+
+
+def run(log=print, out_path: str = DEFAULT_OUT) -> Dict:
     out = {}
     S, M, lps = 4, 8, 3           # 12 blocks over 4 stages
     from repro.core.partition import DeviceProfile
@@ -175,9 +260,12 @@ def run(log=print) -> Dict:
     ticks = {}
     for frozen_stages in range(S):
         t = pipeline_tick_counts(S, M, boundary=frozen_stages * lps, lps=lps)
+        tc = pipeline_tick_counts(S, M, boundary=frozen_stages * lps, lps=lps,
+                                  cached=True)
+        t["fwd_ticks_cached"] = tc["fwd_ticks"]
         ticks[f"frozen_{frozen_stages}"] = t
         log(f"  frozen_stages={frozen_stages}: fwd={t['fwd_ticks']} "
-            f"bwd={t['bwd_ticks']} ticks")
+            f"(cached {tc['fwd_ticks']}) bwd={t['bwd_ticks']} ticks")
     out["tick_counts"] = ticks
 
     layers = [LayerProfile(0.01, 0.02, 20.0, 30.0, 0.6, 2.0)] * 12
@@ -187,20 +275,32 @@ def run(log=print) -> Dict:
     for depth in (1, 3, 6, 12):
         r = simulate_round("ringada", sim, layers, devices,
                            unfreeze_depth=depth)
+        rc = simulate_round("ringada_cached", sim, layers, devices,
+                            unfreeze_depth=depth)
         busy = sum(r.device_busy_s.values())
         util[f"depth_{depth}"] = {
             "round_s": r.time_per_round_s,
+            "round_s_cached": rc.time_per_round_s,
             "utilization": busy / (r.time_per_round_s * 4),
         }
         log(f"  depth={depth:2d}: round={r.time_per_round_s:.3f}s "
+            f"(cached {rc.time_per_round_s:.3f}s) "
             f"util={busy / (r.time_per_round_s * 4):.2%}")
     out["simulated_rounds"] = util
 
-    log("fused RingExecutor vs reference RingTrainer (4 host devices):")
+    log("fused RingExecutor vs reference RingTrainer vs actcache "
+        "(4 host devices):")
     out["fused_vs_reference"] = bench_fused_vs_reference(log)
+    if out_path:
+        out["bench_ring"] = write_bench_ring(out, out_path, log)
     return out
 
 
 if __name__ == "__main__":
     sys.path.insert(0, os.path.join(ROOT, "src"))
-    print(json.dumps(run(), indent=1))
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="where to write BENCH_ring.json ('' to skip)")
+    args = ap.parse_args()
+    print(json.dumps(run(out_path=args.out), indent=1))

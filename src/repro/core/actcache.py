@@ -1,0 +1,168 @@
+"""Boundary-activation cache: device-resident reuse of the frozen trunk.
+
+RingAda's unfreeze schedule is monotone top-down, so every layer below the
+boundary is frozen and Phase A (the ``M + F - 1`` forward-only ticks through
+the frozen trunk, run once per owner-iteration) recomputes activations that
+are bit-identical across epochs until the boundary drops.  This module stores
+those stage-``F`` boundary activations so the fused executor can enter the
+pipeline directly at stage ``F`` on steady-state rounds (see
+``core/pipeline.py``'s module docstring for the full design).
+
+Storage is a single preallocated **donated ring buffer** on device:
+
+  * one array ``[capacity, *entry_shape]``, allocated on first ``put`` with
+    the caller-supplied sharding (the executor passes ``P(None, 'stage')`` so
+    rows stay stage-sharded exactly like the activations they hold),
+  * writes are a jitted ``dynamic_update_index`` with the buffer donated —
+    the XLA update aliases in place, no second copy of the buffer ever lives,
+  * reads never slice on the host: consumers take ``(buffer, row_index)`` and
+    dynamic-index inside their own executable, so a cache hit costs zero
+    host<->device traffic and zero recompilation (the row index is traced).
+
+Keys are ``(batch_slot, boundary)``.  Eviction is LRU over a fixed number of
+rows (``capacity``).  Because the schedule is monotone (enforced by
+``core/unfreeze.py``), a boundary drop makes *every* entry permanently
+unreachable; ``invalidate()`` drops them all in one step and counts the event.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Dict, Hashable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+
+class ActivationCache:
+    """LRU cache of boundary activations in one donated device ring buffer.
+
+    ``capacity`` is the number of entries (batch slots) held at once;
+    ``capacity == 0`` disables the cache (every ``index_of`` misses, ``put``
+    is a no-op).  ``sharding`` (optional) is applied to the buffer when it is
+    first allocated — pass the row sharding extended with a leading
+    replicated axis, e.g. ``NamedSharding(mesh, P(None, 'stage'))``.
+    """
+
+    def __init__(self, capacity: int, *, sharding: Optional[Any] = None):
+        if capacity < 0:
+            raise ValueError(f"capacity must be >= 0, got {capacity}")
+        self.capacity = capacity
+        self.sharding = sharding
+        self._buf: Optional[Array] = None
+        self._rows: "OrderedDict[Hashable, int]" = OrderedDict()  # key -> row
+        self._entry_shape: Optional[Tuple[int, ...]] = None
+        self._entry_dtype = None
+        self._writer = None
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0       # boundary-drop (or manual) clear events
+        self.bypasses = 0            # entries refused because they don't fit
+
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    @property
+    def buffer(self) -> Array:
+        """The backing ring buffer (for consumers that index rows on device)."""
+        assert self._buf is not None, "cache is empty — no buffer yet"
+        return self._buf
+
+    def compatible(self, shape: Tuple[int, ...], dtype=None) -> bool:
+        """Can an entry of this shape (and dtype, if given) live in the buffer?
+
+        Before the first ``put`` any shape fits; afterwards the buffer is
+        fixed and mismatching batches must bypass the cache.
+        """
+        if self.capacity == 0:
+            return False
+        if self._entry_shape is None:
+            return True
+        if tuple(shape) != self._entry_shape:
+            return False
+        return dtype is None or jnp.dtype(dtype) == self._entry_dtype
+
+    # ------------------------------------------------------------------
+    def _ensure_buffer(self, entry: Array) -> None:
+        if self._buf is not None:
+            return
+        self._entry_shape = tuple(entry.shape)
+        self._entry_dtype = jnp.dtype(entry.dtype)
+        shape = (self.capacity,) + self._entry_shape
+        if self.sharding is not None:
+            # allocate directly sharded — never materialize the whole buffer
+            # on one device (it may only fit stage-sharded)
+            self._buf = jax.jit(lambda: jnp.zeros(shape, entry.dtype),
+                                out_shardings=self.sharding)()
+        else:
+            self._buf = jnp.zeros(shape, entry.dtype)
+        write = lambda b, v, i: lax.dynamic_update_index_in_dim(b, v, i, 0)
+        out_shardings = self.sharding if self.sharding is not None else None
+        self._writer = jax.jit(write, donate_argnums=(0,),
+                               out_shardings=out_shardings)
+
+    def put(self, key: Hashable, entry: Array) -> bool:
+        """Insert ``entry`` under ``key`` (evicting LRU if full).
+
+        Returns False (and counts a bypass) when the entry cannot live in the
+        buffer — capacity 0, or a shape/dtype mismatch with the allocated
+        buffer (the batch doesn't fit).  The caller falls back to the
+        uncached path; nothing breaks.
+        """
+        if not self.compatible(entry.shape, entry.dtype):
+            self.bypasses += 1
+            return False
+        self._ensure_buffer(entry)
+        if key in self._rows:
+            row = self._rows.pop(key)
+        elif len(self._rows) >= self.capacity:
+            _, row = self._rows.popitem(last=False)      # evict LRU
+            self.evictions += 1
+        else:
+            used = set(self._rows.values())
+            row = next(r for r in range(self.capacity) if r not in used)
+        self._buf = self._writer(self._buf, entry, row)
+        self._rows[key] = row
+        return True
+
+    def index_of(self, key: Hashable) -> Optional[int]:
+        """Buffer row for ``key`` (None on miss). Counts hit/miss, bumps LRU."""
+        row = self._rows.get(key)
+        if row is None:
+            self.misses += 1
+            return None
+        self._rows.move_to_end(key)
+        self.hits += 1
+        return row
+
+    # ------------------------------------------------------------------
+    def invalidate(self) -> int:
+        """Drop every entry (boundary drop: all keys are now unreachable).
+
+        The buffer itself is kept — same shapes, the rows are just dead —
+        so re-capture after a drop reuses the allocation.  Returns the number
+        of entries dropped; counts one invalidation event if any were live.
+        """
+        n = len(self._rows)
+        self._rows.clear()
+        if n:
+            self.invalidations += 1
+        return n
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        total = self.hits + self.misses
+        return {
+            "cache_hits": self.hits,
+            "cache_misses": self.misses,
+            "cache_hit_rate": self.hits / total if total else 0.0,
+            "cache_evictions": self.evictions,
+            "cache_invalidations": self.invalidations,
+            "cache_bypasses": self.bypasses,
+            "cache_entries": len(self._rows),
+            "cache_capacity": self.capacity,
+        }

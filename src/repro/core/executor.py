@@ -16,25 +16,48 @@ on the adapters, replicated AdamW on the head) — entirely on device:
   * nothing syncs to the host: ``round()`` returns device arrays; callers
     ``float()`` them once per logging interval (async dispatch).
 
+Frozen-trunk activation cache (Phase-A skip, ``core/actcache.py``): with a
+``cache_capacity`` and slot-keyed batches, the executor builds up to three
+executables per boundary —
+
+  * ``direct``  — the PR-1 fused round (tokens in, no capture),
+  * ``capture`` — same round, but each owner-iteration's stage-``F`` boundary
+    activations are additionally emitted and written into the cache's donated
+    device ring buffer (first visit of a ``(slot, boundary)`` key),
+  * ``cached``  — takes ``(cache_buffer, row)`` instead of tokens and launches
+    straight into Phase B: no embed, no ``all_gather``, no frozen-trunk ticks.
+    The row and the owner are traced, so one executable serves every slot and
+    owner; the gather of the cached activations happens on device.
+
+Boundary drops invalidate the whole cache (the unfreeze schedule is monotone
+top-down — enforced here and in ``core/unfreeze.py``).  Batches whose shapes
+don't fit the allocated buffer, or rounds without a slot key (streaming data),
+fall back to ``direct``.
+
 Numerics match ``RingTrainer`` exactly (same ``adamw.leaf_update`` math,
-constant lr, no bias correction) — asserted by tests/test_executor.py.
+constant lr, no bias correction) — asserted by tests/test_executor.py; the
+cached path matches the uncached fused path — asserted by
+tests/test_actcache.py.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.core import pipeline as pl
+from repro.core.actcache import ActivationCache
 from repro.core.unfreeze import UnfreezeSchedule, depth_to_boundary
 from repro.optim import adamw
 
 Array = jax.Array
+
+FUSED_MODES = ("direct", "capture", "cached")
 
 
 def ring_opt_init(stage_blocks: Dict[str, Any], shared: Dict[str, Any]
@@ -58,52 +81,56 @@ def ring_opt_specs() -> Dict[str, Any]:
 
 def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
                      n_stages: int, boundary: int, n_micro: int,
-                     on_trace=None):
-    """Build the fused round:
+                     on_trace=None, mode: str = "direct"):
+    """Build the fused round in one of three modes:
 
-      fn(stage_blocks, shared, opt_state, tokens, labels)
-        -> (stage_blocks, shared, opt_state, losses[S])
+      direct :  fn(stage_blocks, shared, opt_state, tokens, labels)
+                  -> (stage_blocks, shared, opt_state, (losses[S], mean))
+      capture:  same signature, plus a trailing ``h_cap`` output
+                ([S_stage, S_owner, M, mb, seq, D], sharded on 'stage'):
+                every owner-iteration's Phase-A output, ready for the cache.
+      cached :  fn(stage_blocks, shared, opt_state, cache_buf, row, labels)
+                  -> (stage_blocks, shared, opt_state, (losses[S], mean))
+                where ``cache_buf`` is the actcache ring buffer
+                ([capacity, S_stage, S_owner, M, mb, seq, D], sharded
+                P(None, 'stage')) and ``row`` a traced i32 row index.
+                Phase A (embed + all_gather + frozen-trunk ticks) is absent
+                from the executable entirely.
 
-    Static per build: boundary only.  ``on_trace`` (if given) is called each
-    time the function body is traced — i.e. once per XLA compilation — which is
-    how tests count executables.  Wrap the result in
-    ``jax.jit(..., donate_argnums=(0, 1, 2))`` (RingExecutor does).
+    Static per build: (boundary, mode).  ``on_trace`` (if given) is called
+    each time the function body is traced — i.e. once per XLA compilation —
+    which is how tests count executables.  Wrap the result in
+    ``jax.jit(..., donate_argnums=(0, 1, 2))`` (RingExecutor does; the cache
+    buffer is never donated — it outlives the round).
     """
+    assert mode in FUSED_MODES, mode
     S = n_stages
     lps = cfg.repeats // S
     assert boundary % lps == 0, f"boundary {boundary} not stage-aligned"
     F = boundary // lps
-    local_round = pl.ring_round_local(cfg, n_stages=S, boundary=boundary,
-                                      n_micro=n_micro)
+    phase_a = pl.ring_phase_a(cfg, n_stages=S, boundary=boundary,
+                              n_micro=n_micro)
+    phase_b = pl.ring_phase_b(cfg, n_stages=S, boundary=boundary,
+                              n_micro=n_micro)
     lr = jnp.float32(tc.learning_rate)
 
-    def fused(stage_blocks, shared, opt_state, tokens, labels):
-        # Local (per-shard) views: stage-sharded leaves arrive as [1, lps, ...].
-        if on_trace is not None:
-            on_trace()
-        s = lax.axis_index("stage")
-        hot = (s >= F).astype(jnp.float32)            # stage mask (terminator)
+    def run_round(stage_blocks, shared, opt_state, get_h_B, my_labels):
+        """Owner scan + stage-masked optimizer, Phase-A source abstracted:
+        ``get_h_B(owner, adapters)`` -> the stage-F injects [M, mb, seq, D]."""
+        hot = (lax.axis_index("stage") >= F).astype(jnp.float32)
         my_blocks = jax.tree.map(lambda x: x[0], stage_blocks)
-        my_tokens, my_labels = tokens[0], labels[0]
         backbone = {k: v for k, v in my_blocks.items() if k != "adapter"}
         shared_rest = {k: v for k, v in shared.items() if k != "head"}
         unstage = lambda t: jax.tree.map(lambda x: x[0], t)
         restage = lambda t: jax.tree.map(lambda x: x[None], t)
 
-        # Embeddings are round-constant (outside the trainable set): embed +
-        # gather once, not once per owner-iteration.
-        seq = my_tokens.shape[2]
-        mb = my_tokens.shape[1]
-        pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (mb, seq))
-        emb_g = pl.gather_embeddings(cfg, shared_rest, my_tokens, pos)
-
         def owner_iter(carry, owner):
             ad, head, m_ad, v_ad, m_hd, v_hd = carry
+            h_B = get_h_B(owner, ad)
 
             def local_loss(ad_, head_):
-                return local_round(owner, {**backbone, "adapter": ad_},
-                                   {**shared_rest, "head": head_},
-                                   emb_g, my_labels)
+                return phase_b(owner, {**backbone, "adapter": ad_},
+                               {**shared_rest, "head": head_}, h_B, my_labels)
 
             l_loc, (g_ad, g_hd) = jax.value_and_grad(
                 local_loss, argnums=(0, 1))(ad, head)
@@ -114,12 +141,12 @@ def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
                 g_ad, m_ad, v_ad, ad, tc, lr=lr, mask=hot)
             head2, m_hd2, v_hd2 = adamw.tree_update(
                 g_hd, m_hd, v_hd, head, tc, lr=lr)
-            return (ad2, head2, m_ad2, v_ad2, m_hd2, v_hd2), l_loc
+            return (ad2, head2, m_ad2, v_ad2, m_hd2, v_hd2), (l_loc, h_B)
 
         init = (my_blocks["adapter"], shared["head"],
                 unstage(opt_state["m"]["adapter"]), unstage(opt_state["v"]["adapter"]),
                 opt_state["m"]["head"], opt_state["v"]["head"])
-        (ad, head, m_ad, v_ad, m_hd, v_hd), local_losses = lax.scan(
+        (ad, head, m_ad, v_ad, m_hd, v_hd), (local_losses, h_caps) = lax.scan(
             owner_iter, init, jnp.arange(S))
         # each iteration's loss lives only on its owner stage; one vector psum
         # per round replicates all S of them at once.
@@ -131,12 +158,65 @@ def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
         new_opt = {"m": {"adapter": restage(m_ad), "head": m_hd},
                    "v": {"adapter": restage(v_ad), "head": v_hd},
                    "count": opt_state["count"] + S}
-        return new_blocks, new_shared, new_opt, (losses, mean_loss)
+        return new_blocks, new_shared, new_opt, (losses, mean_loss), h_caps
+
+    if mode in ("direct", "capture"):
+
+        def fused(stage_blocks, shared, opt_state, tokens, labels):
+            if on_trace is not None:
+                on_trace()
+            my_tokens, my_labels = tokens[0], labels[0]
+            my_blocks = jax.tree.map(lambda x: x[0], stage_blocks)
+            backbone = {k: v for k, v in my_blocks.items() if k != "adapter"}
+            shared_rest = {k: v for k, v in shared.items() if k != "head"}
+
+            # Embeddings are round-constant (outside the trainable set): embed +
+            # gather once, not once per owner-iteration.
+            seq = my_tokens.shape[2]
+            mb = my_tokens.shape[1]
+            pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None],
+                                   (mb, seq))
+            emb_g = pl.gather_embeddings(cfg, shared_rest, my_tokens, pos)
+
+            def get_h_B(owner, ad):
+                return phase_a(owner, {**backbone, "adapter": ad}, emb_g)
+
+            blocks2, shared2, opt2, metrics, h_caps = run_round(
+                stage_blocks, shared, opt_state, get_h_B, my_labels)
+            if mode == "capture":
+                return blocks2, shared2, opt2, metrics, h_caps[None]
+            return blocks2, shared2, opt2, metrics
+
+        opt_spec = ring_opt_specs()
+        out = (P("stage"), P(), opt_spec, (P(), P()))
+        if mode == "capture":
+            out = out + (P("stage"),)
+        return compat.shard_map(
+            fused, mesh=mesh,
+            in_specs=(P("stage"), P(), opt_spec, P("stage"), P("stage")),
+            out_specs=out)
+
+    # mode == "cached": Phase A replaced by an on-device gather from the ring
+    # buffer — the executable never sees tokens or the embedding table.
+    def fused_cached(stage_blocks, shared, opt_state, cache_buf, row, labels):
+        if on_trace is not None:
+            on_trace()
+        my_labels = labels[0]
+        my_cache = cache_buf[:, 0]                 # [cap, S_owner, M, mb, seq, D]
+        h_slot = lax.dynamic_index_in_dim(my_cache, row, 0, keepdims=False)
+
+        def get_h_B(owner, ad):
+            return lax.dynamic_index_in_dim(h_slot, owner, 0, keepdims=False)
+
+        blocks2, shared2, opt2, metrics, _ = run_round(
+            stage_blocks, shared, opt_state, get_h_B, my_labels)
+        return blocks2, shared2, opt2, metrics
 
     opt_spec = ring_opt_specs()
     return compat.shard_map(
-        fused, mesh=mesh,
-        in_specs=(P("stage"), P(), opt_spec, P("stage"), P("stage")),
+        fused_cached, mesh=mesh,
+        in_specs=(P("stage"), P(), opt_spec, P(None, "stage"), P(),
+                  P("stage")),
         out_specs=(P("stage"), P(), opt_spec, (P(), P())))
 
 
@@ -149,6 +229,11 @@ class RingExecutor:
     optimizer loop, and ``round()`` never blocks on the host (metrics are
     device arrays; see ``materialize_metrics``).
 
+    With ``cache_capacity > 0``, pass ``slot=<stable batch-slot id>`` to
+    ``round``: steady-state revisits of a ``(slot, boundary)`` key skip
+    Phase A entirely (see module docstring).  ``slot=None`` (or capacity 0)
+    preserves the PR-1 behavior exactly.
+
     The unfreeze boundary is evaluated once per round (at the round's first
     step).  When ``tc.unfreeze_interval`` is a multiple of ``n_stages`` this is
     identical to the reference trainer's per-iteration evaluation; otherwise a
@@ -157,7 +242,7 @@ class RingExecutor:
 
     def __init__(self, cfg: ModelConfig, tc: TrainConfig, mesh: Mesh,
                  params: Dict[str, Any], n_stages: int, n_micro: int, *,
-                 donate: bool = True):
+                 donate: bool = True, cache_capacity: int = 0):
         assert len(cfg.pattern) == 1, "ring executor needs a uniform pattern"
         self.cfg, self.tc, self.mesh = cfg, tc, mesh
         self.S, self.M = n_stages, n_micro
@@ -168,8 +253,15 @@ class RingExecutor:
         self.opt_state = ring_opt_init(self.stage_blocks, self.shared)
         self.sched = UnfreezeSchedule.from_train_config(tc)
         self.donate = donate
-        self._fns: Dict[int, Any] = {}            # boundary -> jitted fused fn
-        self.trace_counts: Dict[int, int] = {}    # boundary -> #compilations
+        self.cache: Optional[ActivationCache] = None
+        if cache_capacity:
+            self.cache = ActivationCache(
+                cache_capacity,
+                sharding=NamedSharding(mesh, P(None, "stage")))
+        self._fns: Dict[Tuple[int, str], Any] = {}  # (boundary, mode) -> jit fn
+        self.trace_counts: Dict[int, int] = {}      # boundary -> #compilations
+        self.mode_trace_counts: Dict[Tuple[int, str], int] = {}
+        self._last_boundary: Optional[int] = None
         self.step = 0
 
     # ------------------------------------------------------------------
@@ -178,40 +270,98 @@ class RingExecutor:
         b = depth_to_boundary(self.cfg, depth)
         return (b // self.lps) * self.lps          # stage-aligned (terminator)
 
-    def _fn(self, boundary: int):
-        if boundary not in self._fns:
+    def _fn(self, boundary: int, mode: str = "direct"):
+        key = (boundary, mode)
+        if key not in self._fns:
             self.trace_counts.setdefault(boundary, 0)
 
-            def bump(b=boundary):
+            def bump(b=boundary, mo=mode):
                 self.trace_counts[b] += 1
+                self.mode_trace_counts[(b, mo)] = (
+                    self.mode_trace_counts.get((b, mo), 0) + 1)
 
             fused = make_fused_round(self.cfg, self.tc, self.mesh,
                                      n_stages=self.S, boundary=boundary,
-                                     n_micro=self.M, on_trace=bump)
+                                     n_micro=self.M, on_trace=bump, mode=mode)
             donate = (0, 1, 2) if self.donate else ()
-            self._fns[boundary] = jax.jit(fused, donate_argnums=donate)
-        return self._fns[boundary]
+            self._fns[key] = jax.jit(fused, donate_argnums=donate)
+        return self._fns[key]
 
     @property
     def n_executables(self) -> int:
         return len(self._fns)
 
+    def compile_counts(self) -> Dict[str, int]:
+        """{'<boundary>/<mode>': traces} — the bench's per-boundary record."""
+        return {f"{b}/{mode}": n
+                for (b, mode), n in sorted(self.mode_trace_counts.items())}
+
     # ------------------------------------------------------------------
-    def round(self, tokens: Array, labels: Array) -> Dict[str, Any]:
+    def _entry_shape(self, labels: Array):
+        """Global shape of one cache entry for the current batch
+        ([S_stage, S_owner, M, mb, seq, D]; dtype is whatever capture stored)."""
+        _, M, mb, seq = labels.shape
+        return (self.S, self.S, M, mb, seq, self.cfg.d_model)
+
+    def round(self, tokens: Array, labels: Array, *,
+              slot: Optional[int] = None) -> Dict[str, Any]:
         """One training round: every client acts as initiator once.
 
         tokens/labels: [S, M, mb, seq] per-client local data for this round.
+        slot: stable batch-slot id (same slot => same examples, the cache-key
+        contract; see ``data.pipeline.RingBatcher`` with ``slots_per_epoch``).
         Returns metrics as DEVICE arrays — no host sync.  Use
         ``materialize_metrics`` (or ``float()``) at your logging interval.
         """
         boundary = self.boundary_at(self.step)
-        fn = self._fn(boundary)
-        (self.stage_blocks, self.shared, self.opt_state,
-         (losses, mean_loss)) = fn(
-            self.stage_blocks, self.shared, self.opt_state, tokens, labels)
+        if self._last_boundary is not None and boundary > self._last_boundary:
+            raise RuntimeError(
+                f"unfreeze boundary increased {self._last_boundary} -> "
+                f"{boundary} at step {self.step}; RingAda schedules are "
+                f"monotone top-down and the activation cache's invalidation "
+                f"contract depends on it (see core/unfreeze.py)")
+        if (self.cache is not None and self._last_boundary is not None
+                and boundary < self._last_boundary):
+            self.cache.invalidate()                # boundary drop: all keys dead
+        self._last_boundary = boundary
+
+        cache_hit = False
+        use_cache = self.cache is not None and slot is not None
+        if use_cache:
+            if not self.cache.compatible(self._entry_shape(labels)):
+                self.cache.bypasses += 1           # batch doesn't fit the buffer
+                use_cache = False
+
+        if use_cache:
+            key = (slot, boundary)
+            row = self.cache.index_of(key)
+            if row is not None:
+                fn = self._fn(boundary, "cached")
+                (self.stage_blocks, self.shared, self.opt_state,
+                 (losses, mean_loss)) = fn(
+                    self.stage_blocks, self.shared, self.opt_state,
+                    self.cache.buffer, jnp.int32(row), labels)
+                cache_hit = True
+            else:
+                fn = self._fn(boundary, "capture")
+                (self.stage_blocks, self.shared, self.opt_state,
+                 (losses, mean_loss), h_cap) = fn(
+                    self.stage_blocks, self.shared, self.opt_state,
+                    tokens, labels)
+                self.cache.put(key, h_cap)
+        else:
+            fn = self._fn(boundary, "direct")
+            (self.stage_blocks, self.shared, self.opt_state,
+             (losses, mean_loss)) = fn(
+                self.stage_blocks, self.shared, self.opt_state, tokens, labels)
+
         self.step += self.S
-        return {"loss": mean_loss, "losses": losses,
-                "boundary": boundary, "step": self.step}
+        out = {"loss": mean_loss, "losses": losses,
+               "boundary": boundary, "step": self.step,
+               "cache_hit": cache_hit}
+        if self.cache is not None:
+            out.update(self.cache.stats())
+        return out
 
     @staticmethod
     def materialize_metrics(m: Dict[str, Any]) -> Dict[str, Any]:

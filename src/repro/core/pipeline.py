@@ -35,11 +35,39 @@ consume them (the executor split):
     dynamic permute), so one executable serves every owner.
     ``core/executor.py``'s ``RingExecutor`` scans this over all S owners and
     runs the stage-masked optimizer *inside* a single donated jit.
+    ``ring_round_local`` is itself the composition of two halves,
+    ``ring_phase_a`` (embeddings -> stage-``F`` boundary activations) and
+    ``ring_phase_b`` (boundary activations -> local loss), exposed separately
+    so the executor can cache the Phase-A output.
+
+Phase-A skip (the frozen-trunk activation cache, ``core/actcache.py``):
+
+  Everything Phase A reads — the embedding table, the frozen trunk's backbone
+  weights, and the frozen stages' adapters — is *outside* RingAda's trainable
+  set while the boundary holds (the optimizer's stage mask keeps frozen
+  adapters and their moments bit-identical).  Its output, the stage-``F``
+  input activations ``h_B``, is therefore bit-identical across rounds for the
+  same microbatches at the same boundary.  ``RingExecutor`` exploits this:
+  the first time a batch slot is seen at a boundary it runs a *capture*
+  executable (full round, Phase-A outputs written to a donated device ring
+  buffer), and on every later visit a *cached* executable enters the pipeline
+  directly at stage ``F`` — no embed, no ``all_gather``, none of the
+  ``M + F - 1`` frozen-trunk ticks per owner-iteration.
+
+  Invalidation rules: entries are keyed ``(batch_slot, boundary)``.  The
+  unfreeze schedule is monotone top-down (``core/unfreeze.py`` rejects
+  anything else), so when the boundary drops every cached entry is
+  permanently unreachable and the whole cache is dropped in one invalidation.
+  Within a boundary segment nothing the cache depends on can change, so no
+  finer-grained invalidation exists.  Disable the cache (capacity 0 / no
+  batch slots) for streaming or non-repeating data — a slot that is never
+  revisited only pays the capture write without ever hitting.
 
 SPMD adaptation (DESIGN.md §6): per-device *program* asymmetry is impossible under
 SPMD, so the paper's per-device savings appear as globally shorter backward tick
 scans and absent residual stashes for phase A, uniform across devices. The
-discrete-event simulator (core/simulator.py) models the true MPMD overlap.
+discrete-event simulator (core/simulator.py) models the true MPMD overlap
+(``scheme='ringada_cached'`` models the cached steady state).
 """
 from __future__ import annotations
 
@@ -243,6 +271,93 @@ def gather_embeddings(cfg: ModelConfig, shared: Dict[str, Any],
     return lax.all_gather(emb_all, "stage")
 
 
+def _ring_geometry(cfg: ModelConfig, n_stages: int, boundary: int):
+    lps = cfg.repeats // n_stages
+    assert boundary % lps == 0, f"boundary {boundary} not stage-aligned (lps={lps})"
+    return lps, boundary // lps
+
+
+def ring_phase_a(cfg: ModelConfig, *, n_stages: int, boundary: int,
+                 n_micro: int):
+    """Phase A of the local round: embeddings -> stage-``F`` boundary inputs.
+
+    Returns ``fn(owner, my_blocks, emb_g) -> h_B`` ([M, mb, seq, D]
+    stage-local), where ``h_B`` is exactly what Phase B injects at stage F:
+    the frozen trunk's outputs after the F-1 -> F hop (or, at boundary 0, the
+    owner's embeddings dynamically rotated to stage 0).  Always emitted under
+    ``stop_gradient`` — the trunk is frozen by construction, which is also
+    what makes ``h_B`` cacheable across rounds (see module docstring).
+    """
+    S = n_stages
+    _, F = _ring_geometry(cfg, n_stages, boundary)
+    fwd_perm = [(i, (i + 1) % S) for i in range(S)]
+
+    def phase_a(owner, my_blocks, emb_g):
+        s = lax.axis_index("stage")
+        seq = emb_g.shape[3]
+        mb = emb_g.shape[2]
+        pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (mb, seq))
+
+        # owner -> stage 0: stage j reads stage (j+owner)'s embeddings
+        emb_at0 = lax.dynamic_index_in_dim(emb_g, (s + owner) % S, 0,
+                                           keepdims=False)
+        if F > 0:
+            outs_A = _tick_phase(cfg, s, pos, fwd_perm, n_micro,
+                                 lax.stop_gradient(my_blocks),
+                                 lax.stop_gradient(emb_at0), 0, F)
+            outs_A = lax.stop_gradient(outs_A)
+            h_B = lax.ppermute(outs_A, "stage", fwd_perm)
+        else:
+            h_B = emb_at0
+        return lax.stop_gradient(h_B)
+
+    return phase_a
+
+
+def ring_phase_b(cfg: ModelConfig, *, n_stages: int, boundary: int,
+                 n_micro: int):
+    """Phase B of the local round: stage-``F`` inputs -> local masked loss.
+
+    Returns ``fn(owner, my_blocks, shared, h_B, my_labels) -> local_loss``.
+    This is the only differentiable half: the hot 1F1B tick pipeline over
+    stages [F, S), the last-stage -> owner hop, and the owner-local loss.
+    ``h_B`` may come from ``ring_phase_a`` live or from the activation cache —
+    the cache stores exactly the bits the capturing executable computed, and
+    nothing Phase A reads changes while the boundary holds (differently-fused
+    executables may still differ in float ulps; tests pin allclose).
+    """
+    _, F = _ring_geometry(cfg, n_stages, boundary)
+    S = n_stages
+    S_hot = S - F
+    M = n_micro
+    fwd_perm = [(i, (i + 1) % S) for i in range(S)]
+    # stacked static tables: branch o ships stage S-1's outputs home to owner o
+    back_tables = [[(i, (i - (S - 1) + o) % S) for i in range(S)]
+                   for o in range(S)]
+
+    def phase_b(owner, my_blocks, shared, h_B, my_labels):
+        s = lax.axis_index("stage")
+        mb, seq = my_labels.shape[1], my_labels.shape[2]
+        pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (mb, seq))
+
+        # hot 1F1B pipeline; grad => reverse ticks, stops at stage F
+        outs_B = _tick_phase(cfg, s, pos, fwd_perm, M, my_blocks, h_B, F, S_hot)
+
+        # last stage -> owner: switch over the stacked static tables
+        finals = lax.switch(
+            owner,
+            [lambda h, t=tbl: lax.ppermute(h, "stage", t) for tbl in back_tables],
+            outs_B)
+        logits = jax.vmap(lambda hh: tfm.head(cfg, shared, hh))(finals)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(lf, my_labels[..., None], axis=-1)[..., 0]
+        is_owner = (s == owner).astype(jnp.float32)
+        return jnp.mean(lse - gold) * is_owner           # LOCAL (not psum'd)
+
+    return phase_b
+
+
 def ring_round_local(cfg: ModelConfig, *, n_stages: int, boundary: int,
                      n_micro: int):
     """Local (per-shard) RingAda round with a **traced** owner.
@@ -266,69 +381,36 @@ def ring_round_local(cfg: ModelConfig, *, n_stages: int, boundary: int,
     transposes (ppermute inverse, scatter-sum) route cotangents across stages
     so the per-stage grads equal the reference path's.  psum the values (once
     per round) and the head grads (once per iteration) afterwards.
+
+    Composition of ``ring_phase_a`` and ``ring_phase_b`` (the executor calls
+    the halves directly so it can capture / reuse the Phase-A output).
     """
-    R = cfg.repeats
-    lps = R // n_stages
-    assert boundary % lps == 0, f"boundary {boundary} not stage-aligned (lps={lps})"
-    F = boundary // lps
-    S = n_stages
-    S_hot = S - F
-    M = n_micro
-    fwd_perm = [(i, (i + 1) % S) for i in range(S)]
-    # stacked static tables: branch o ships stage S-1's outputs home to owner o
-    back_tables = [[(i, (i - (S - 1) + o) % S) for i in range(S)]
-                   for o in range(S)]
+    phase_a = ring_phase_a(cfg, n_stages=n_stages, boundary=boundary,
+                           n_micro=n_micro)
+    phase_b = ring_phase_b(cfg, n_stages=n_stages, boundary=boundary,
+                           n_micro=n_micro)
 
     def local_fn(owner, my_blocks, shared, emb_g, my_labels):
-        s = lax.axis_index("stage")
-        mb, seq = my_labels.shape[1], my_labels.shape[2]
-        pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (mb, seq))
-
-        # 1. owner -> stage 0: stage j reads stage (j+owner)'s embeddings
-        emb_at0 = lax.dynamic_index_in_dim(emb_g, (s + owner) % S, 0,
-                                           keepdims=False)
-
-        phase = lambda blocks_slice, h_inject, first, depth: _tick_phase(
-            cfg, s, pos, fwd_perm, M, blocks_slice, h_inject, first, depth)
-
-        # 2. Phase A (frozen trunk, forward-only)
-        if F > 0:
-            outs_A = phase(lax.stop_gradient(my_blocks),
-                           lax.stop_gradient(emb_at0), 0, F)
-            outs_A = lax.stop_gradient(outs_A)
-            h_B = lax.ppermute(outs_A, "stage", fwd_perm)
-        else:
-            h_B = emb_at0
-
-        # 3. Phase B (hot 1F1B pipeline)
-        outs_B = phase(my_blocks, h_B, F, S_hot)
-
-        # 4. last stage -> owner: switch over the stacked static tables
-        finals = lax.switch(
-            owner,
-            [lambda h, t=tbl: lax.ppermute(h, "stage", t) for tbl in back_tables],
-            outs_B)
-        logits = jax.vmap(lambda hh: tfm.head(cfg, shared, hh))(finals)
-        lf = logits.astype(jnp.float32)
-        lse = jax.nn.logsumexp(lf, axis=-1)
-        gold = jnp.take_along_axis(lf, my_labels[..., None], axis=-1)[..., 0]
-        is_owner = (s == owner).astype(jnp.float32)
-        return jnp.mean(lse - gold) * is_owner           # LOCAL (not psum'd)
+        h_B = phase_a(owner, my_blocks, emb_g)
+        return phase_b(owner, my_blocks, shared, h_B, my_labels)
 
     return local_fn
 
 
-def pipeline_tick_counts(n_stages: int, n_micro: int, boundary: int, lps: int
-                         ) -> Dict[str, int]:
+def pipeline_tick_counts(n_stages: int, n_micro: int, boundary: int, lps: int,
+                         *, cached: bool = False) -> Dict[str, int]:
     """Analytic tick counts (used by tests and the §Perf log).
 
     PipeAdapter (boundary 0): fwd M+S-1, bwd M+S-1.
     RingAda: fwd (M+F-1) + (M+S_hot-1) + 1 hop, bwd M+S_hot-1.
+    RingAda + actcache steady state (``cached=True``): the whole Phase-A tick
+    scan vanishes — fwd M+S_hot-1 only, bwd unchanged.
     """
     F = boundary // lps
     S_hot = n_stages - F
+    phase_a = 0 if (cached or F == 0) else n_micro + F - 1
     return {
-        "fwd_ticks": (n_micro + F - 1 if F else 0) + n_micro + S_hot - 1,
+        "fwd_ticks": phase_a + n_micro + S_hot - 1,
         "bwd_ticks": n_micro + S_hot - 1,
         "frozen_stages": F,
         "hot_stages": S_hot,

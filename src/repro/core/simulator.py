@@ -12,6 +12,12 @@ speed, and the three schemes are replayed by a discrete-event engine:
                         at the terminator device; devices whose adapters are all
                         frozen stream forward passes continuously (no 1F1B stall),
                         single weight version (staleness-free by construction)
+  * ``ringada_cached`` — RingAda steady state with the frozen-trunk activation
+                        cache (core/actcache.py): on cache-hit rounds the frozen
+                        devices do NO forward work at all — the terminator reads
+                        the boundary activations from its local cache and the
+                        pipeline starts there.  Keeps simulated and measured
+                        Phase-A-skip speedups comparable.
 
 Outputs per scheme: wall-clock time per epoch / to convergence, per-device peak
 memory (weights + adapters + optimizer + activation stashes + weight stashes) —
@@ -71,10 +77,17 @@ def _link_time(mb: float, mbps: float) -> float:
 def simulate_round(scheme: str, sim: SimConfig, layers: Sequence[LayerProfile],
                    devices: Sequence[DeviceProfile],
                    unfreeze_depth: Optional[int] = None,
-                   spans: Optional[List[Tuple[int, int]]] = None) -> SimResult:
-    """Simulate one training round (M microbatches through fwd+bwd)."""
+                   spans: Optional[List[Tuple[int, int]]] = None,
+                   cache_slots: int = 1) -> SimResult:
+    """Simulate one training round (M microbatches through fwd+bwd).
+
+    ``scheme='ringada_cached'`` simulates a steady-state (cache-hit) round:
+    frozen devices idle, the terminator injects cached boundary activations.
+    ``cache_slots`` sizes the terminator's cache memory (entries held)."""
     L, U, M = sim.n_layers, sim.n_devices, sim.n_microbatches
     assert len(layers) == L
+    cached = scheme == "ringada_cached"
+    ring_like = scheme in ("ringada", "ringada_cached")
 
     if scheme == "single":
         dev = devices[0]
@@ -121,6 +134,8 @@ def simulate_round(scheme: str, sim: SimConfig, layers: Sequence[LayerProfile],
     remaining = []
     for m in range(M):
         for u in range(U):
+            if cached and u < terminator:
+                continue          # frozen trunk skipped: activations cached
             remaining.append(("fwd", m, u))
         for u in range(U - 1, terminator - 1, -1):
             remaining.append(("bwd", m, u))
@@ -129,12 +144,14 @@ def simulate_round(scheme: str, sim: SimConfig, layers: Sequence[LayerProfile],
         kind, m, u = op
         if kind == "fwd":
             t = 0.0
-            if u > 0:
+            # the terminator's cached round reads boundary activations from
+            # its local cache: no upstream forward to wait for
+            if u > 0 and not (cached and u == terminator):
                 prev = done.get(("fwd", m, u - 1))
                 if prev is None:
                     return None
                 t = prev + hop(u - 1)
-            hot = not (scheme == "ringada" and u < terminator)
+            hot = not (ring_like and u < terminator)
             w = U - u
             if hot and m - w >= 0 and terminator <= u:
                 prevb = done.get(("bwd", m - w, max(u, terminator)))
@@ -192,10 +209,14 @@ def simulate_round(scheme: str, sim: SimConfig, layers: Sequence[LayerProfile],
             inflight = min(M, U)
             mem += inflight * sum(layers[i].act_mb for i in range(b, e))
             mem += (inflight - 1) * ad        # stale adapter copies
-        elif scheme == "ringada":
+        elif ring_like:
             # staleness-free: one weight version; residuals only for hot blocks,
             # and only one microbatch's worth (strict 1F1B on hot devices)
             mem += sum(layers[i].act_mb for i in range(max(b, lowest_hot), e))
+            if cached and u == terminator and lowest_hot > 0:
+                # the boundary-activation ring buffer lives on the terminator:
+                # one boundary tensor per microbatch per cached slot
+                mem += cache_slots * M * layers[lowest_hot - 1].boundary_mb
         peak[u] = mem
 
     return SimResult(total, peak, {u: busy[u] for u in range(U)}, bubbles)
@@ -212,13 +233,25 @@ def simulate_training(scheme: str, sim: SimConfig,
                       rounds: int, unfreeze_interval: int = 40,
                       initial_depth: int = 1,
                       spans: Optional[List[Tuple[int, int]]] = None,
+                      slots_per_epoch: int = 1,
                       ) -> Tuple[float, float, List[float]]:
-    """Returns (total_time_s, peak_memory_mb, cumulative_time_per_round)."""
+    """Returns (total_time_s, peak_memory_mb, cumulative_time_per_round).
+
+    For ``scheme='ringada_cached'`` the first ``slots_per_epoch`` rounds after
+    every boundary drop are capture rounds (full Phase A, simulated as plain
+    ``ringada``); subsequent rounds at that boundary hit the cache."""
     total, peak, times = 0.0, 0.0, []
+    rounds_at_depth, last_depth = 0, None
     for r in range(rounds):
         depth = min(initial_depth + r // unfreeze_interval, sim.n_layers)
-        res = simulate_round(scheme, sim, layers, devices,
-                             unfreeze_depth=depth, spans=spans)
+        rounds_at_depth = rounds_at_depth + 1 if depth == last_depth else 0
+        last_depth = depth
+        eff = scheme
+        if scheme == "ringada_cached" and rounds_at_depth < slots_per_epoch:
+            eff = "ringada"                       # first epoch: capture rounds
+        res = simulate_round(eff, sim, layers, devices,
+                             unfreeze_depth=depth, spans=spans,
+                             cache_slots=slots_per_epoch)
         total += res.time_per_round_s
         peak = max(peak, res.max_memory_mb)
         times.append(total)

@@ -10,6 +10,14 @@ The schedule starts with only the head + the top-most adapter trainable
 ``boundary`` used by the model is ``boundary = R - depth_in_repeats`` (frozen
 repeats from the bottom). Because the boundary is a static jit argument, every
 depth change triggers one (cached) recompile — amortized over >= k steps.
+
+Schedules are **monotone top-down by contract**: depth never shrinks, so the
+boundary never increases.  This is not just the paper's Algorithm 1 — the
+frozen-trunk activation cache (``core/actcache.py``) keys entries by
+``(batch_slot, boundary)`` and invalidates everything on a boundary *drop*;
+a boundary that could come back up would silently serve stale activations.
+Construction rejects non-monotone ``depths`` with a clear error, and the
+executor re-checks at runtime.
 """
 from __future__ import annotations
 
@@ -24,6 +32,29 @@ class UnfreezeSchedule:
     initial_depth: int = 1
     interval: int = 40               # k
     max_depth: Optional[int] = None  # defaults to all blocks
+    # Explicit per-segment depths (segment i covers steps [i*k, (i+1)*k), the
+    # last entry holds forever).  Overrides the +1-per-interval rule; must be
+    # non-decreasing (monotone top-down unfreezing).
+    depths: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        if self.interval < 1:
+            raise ValueError(
+                f"unfreeze_interval must be >= 1, got {self.interval}")
+        if self.initial_depth < 1:
+            raise ValueError(
+                f"initial_unfreeze_depth must be >= 1, got {self.initial_depth}")
+        if self.depths is not None:
+            if len(self.depths) == 0 or any(d < 1 for d in self.depths):
+                raise ValueError(f"explicit depths must be >= 1: {self.depths}")
+            drops = [(a, b) for a, b in zip(self.depths, self.depths[1:])
+                     if b < a]
+            if drops:
+                raise ValueError(
+                    f"non-monotone unfreeze schedule {self.depths}: depth "
+                    f"shrinks at {drops} — RingAda unfreezes top-down only "
+                    f"(the boundary may never increase; the activation "
+                    f"cache's invalidation contract depends on it)")
 
     @staticmethod
     def from_train_config(tc: TrainConfig) -> "UnfreezeSchedule":
@@ -33,6 +64,9 @@ class UnfreezeSchedule:
 
     def depth_at(self, step: int, n_blocks: int) -> int:
         cap = min(self.max_depth or n_blocks, n_blocks)
+        if self.depths is not None:
+            seg = min(step // self.interval, len(self.depths) - 1)
+            return min(self.depths[seg], cap)
         return min(self.initial_depth + step // self.interval, cap)
 
 
@@ -62,6 +96,11 @@ def boundary_schedule(cfg: ModelConfig, sched: UnfreezeSchedule, total_steps: in
     for s in range(1, total_steps):
         b = depth_to_boundary(cfg, sched.depth_at(s, n_blocks))
         if b != cur:
+            if b > cur:
+                raise ValueError(
+                    f"non-monotone unfreeze schedule: boundary rises "
+                    f"{cur} -> {b} at step {s} (RingAda unfreezes top-down "
+                    f"only; see UnfreezeSchedule)")
             segs.append((start, s, cur))
             start, cur = s, b
     segs.append((start, total_steps, cur))

@@ -14,7 +14,7 @@ Two task flavours:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -79,21 +79,75 @@ def make_client_datasets(n_clients: int, *, vocab: int, n_per_client: int,
 
 
 class RingBatcher:
-    """Yields [S, M, mb, seq] stacked per-client microbatches for ring rounds."""
+    """Yields [S, M, mb, seq] stacked per-client microbatches for ring rounds.
+
+    Two sampling modes:
+
+      * ``next()`` — fresh random draw every call (streaming-style; no batch
+        identity across rounds).
+      * ``next_slot()`` (requires ``slots_per_epoch``) — the epoch is a fixed
+        cycle of ``slots_per_epoch`` batch *slots*; the slot -> example
+        mapping is drawn ONCE from ``seed`` at construction and reused every
+        epoch, so slot ``i`` holds bit-identical tokens/labels in epoch 0, 1,
+        2, ...  This determinism is the activation cache's key contract
+        (``core/actcache.py``): ``(slot, boundary)`` identifies the frozen
+        trunk's inputs exactly.  Same seed => same mapping, across epochs and
+        across re-instantiation.
+    """
 
     def __init__(self, datasets: List[ClientDataset], n_micro: int,
-                 micro_batch: int, seed: int = 0):
+                 micro_batch: int, seed: int = 0,
+                 slots_per_epoch: Optional[int] = None):
         self.ds = datasets
         self.M, self.mb = n_micro, micro_batch
         self.rng = np.random.default_rng(seed)
+        self.slots_per_epoch = slots_per_epoch
+        self._t = 0
+        self._slot_batches: List[Tuple[Array, Array]] = []
+        if slots_per_epoch is not None:
+            if slots_per_epoch < 1:
+                raise ValueError(f"slots_per_epoch must be >= 1, "
+                                 f"got {slots_per_epoch}")
+            # one dedicated generator so next() draws don't perturb the mapping
+            srng = np.random.default_rng(np.random.SeedSequence([seed, 1]))
+            n = self.M * self.mb
+            self._slot_idx = [
+                [srng.integers(0, len(d), size=n) for d in datasets]
+                for _ in range(slots_per_epoch)]
 
-    def next(self) -> Tuple[Array, Array]:
+    def _stack(self, idx_per_ds) -> Tuple[Array, Array]:
         toks, labs = [], []
-        for d in self.ds:
-            idx = self.rng.integers(0, len(d), size=self.M * self.mb)
+        for d, idx in zip(self.ds, idx_per_ds):
             toks.append(d.tokens[idx].reshape(self.M, self.mb, -1))
             labs.append(d.labels[idx].reshape(self.M, self.mb, -1))
         return (jnp.asarray(np.stack(toks)), jnp.asarray(np.stack(labs)))
+
+    def next(self) -> Tuple[Array, Array]:
+        idx = [self.rng.integers(0, len(d), size=self.M * self.mb)
+               for d in self.ds]
+        return self._stack(idx)
+
+    def next_slot(self) -> Tuple[int, Array, Array]:
+        """(slot, tokens, labels) — cycles slots 0..slots_per_epoch-1 forever.
+
+        Batches are materialized on device once per slot and reused every
+        epoch (they are identical by construction), so steady-state epochs do
+        zero host-side batch assembly.
+        """
+        if self.slots_per_epoch is None:
+            raise ValueError("RingBatcher built without slots_per_epoch; "
+                             "use next() or pass slots_per_epoch")
+        slot = self._t % self.slots_per_epoch
+        self._t += 1
+        if slot >= len(self._slot_batches):
+            self._slot_batches.append(self._stack(self._slot_idx[slot]))
+        toks, labs = self._slot_batches[slot]
+        return slot, toks, labs
+
+    @property
+    def epoch(self) -> int:
+        return (0 if self.slots_per_epoch is None
+                else self._t // self.slots_per_epoch)
 
 
 class Batcher:

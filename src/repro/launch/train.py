@@ -87,6 +87,8 @@ def train_pjit(cfg, tc: TrainConfig, *, steps: int, log_every: int = 10,
 
 def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
                log_every: int = 1, trainer: str = "fused",
+               slots_per_epoch: Optional[int] = None,
+               cache_capacity: Optional[int] = None,
                log=print) -> Dict[str, Any]:
     """Ring-pipeline training across ``n_stages`` devices.
 
@@ -94,6 +96,16 @@ def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
     owner-iterations + optimizer) is one donated executable and metrics stay on
     device between logging intervals (async dispatch: the host never blocks
     mid-interval).  trainer='reference': the unfused ``RingTrainer`` oracle.
+
+    slots_per_epoch: epoch-stable batch slots (same slot => same examples every
+    epoch).  With the fused trainer this enables the frozen-trunk activation
+    cache: steady-state revisits of a (slot, boundary) key skip Phase A
+    entirely; a boundary drop invalidates the cache (core/actcache.py).  The
+    default ``None`` keeps the pre-cache behavior exactly: a fresh random draw
+    every round, cache off (it would never hit) — epoch-style training over a
+    fixed slot cycle is opt-in because it changes which data the model sees.
+    cache_capacity defaults to slots_per_epoch; 0 disables the cache while
+    keeping slotted batches.
     """
     from repro import compat
     from repro.core.executor import RingExecutor
@@ -119,12 +131,26 @@ def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
     mesh = make_ring_mesh(n_stages)
     key = jax.random.key(tc.seed)
     params = prm.materialize(prm.param_defs(cfg), key, cfg.dtype)
-    cls = RingExecutor if trainer == "fused" else RingTrainer
-    drv = cls(cfg, tc, mesh, params, n_stages, tc.n_microbatches)
+    if trainer == "fused":
+        cap = cache_capacity if cache_capacity is not None else (slots_per_epoch or 0)
+        if not slots_per_epoch:
+            cap = 0          # no stable slots => keys never repeat => no cache
+        elif 0 < cap < slots_per_epoch:
+            # round-robin slots + LRU: every slot is evicted before its
+            # revisit, so every round pays capture overhead for 0% hits
+            log(f"WARNING: cache_capacity {cap} < slots_per_epoch "
+                f"{slots_per_epoch}: the cache will thrash (0% hits, "
+                f"capture overhead every round) — raise the capacity or "
+                f"disable the cache (cache_capacity=0)")
+        drv = RingExecutor(cfg, tc, mesh, params, n_stages, tc.n_microbatches,
+                           cache_capacity=cap)
+    else:
+        drv = RingTrainer(cfg, tc, mesh, params, n_stages, tc.n_microbatches)
     clients = make_client_datasets(n_stages, vocab=cfg.vocab_size,
                                    n_per_client=128, seq=tc.seq_len,
                                    seed=tc.seed)
-    rb = RingBatcher(clients, tc.n_microbatches, tc.batch_size, seed=tc.seed)
+    rb = RingBatcher(clients, tc.n_microbatches, tc.batch_size, seed=tc.seed,
+                     slots_per_epoch=slots_per_epoch)
 
     history = []
     pending = []          # fused path: device-array metrics awaiting host sync
@@ -137,18 +163,29 @@ def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
             history.append(m2)
         pending.clear()
 
+    def cache_note(h):
+        if "cache_hit_rate" not in h:
+            return ""
+        return (f" cache[hit={h['cache_hit_rate']:.0%} "
+                f"inval={h['cache_invalidations']}]")
+
     with compat.set_mesh(mesh):
         for r in range(rounds):
-            tokens, labels = rb.next()
-            m = drv.round(tokens, labels)
+            if slots_per_epoch:
+                slot, tokens, labels = rb.next_slot()
+            else:
+                slot, (tokens, labels) = None, rb.next()
             if trainer == "fused":
+                m = drv.round(tokens, labels, slot=slot)
                 pending.append(m)
                 if r % log_every == 0 or r == rounds - 1:
                     flush()                  # one host sync per interval
                     h = history[-1]
                     log(f"round {r:4d} loss={h['loss']:.4f} "
-                        f"boundary={h['boundary']} ({h['wall_s']}s)")
+                        f"boundary={h['boundary']}{cache_note(h)} "
+                        f"({h['wall_s']}s)")
             else:
+                m = drv.round(tokens, labels)
                 m["wall_s"] = round(time.time() - t0, 2)
                 history.append(m)
                 if r % log_every == 0:
@@ -178,6 +215,17 @@ def main() -> None:
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--unfreeze-interval", type=int, default=40)
+    ap.add_argument("--slots-per-epoch", type=int, default=0,
+                    help="ring mode: epoch-stable batch slots (the activation "
+                         "cache's key space; e.g. 8 enables the Phase-A-skip "
+                         "cache); 0 (default) = streaming random batches, "
+                         "cache off — the pre-cache behavior")
+    ap.add_argument("--cache-capacity", type=int, default=None,
+                    help="ring mode: boundary-activation cache entries "
+                         "(default: slots-per-epoch; 0 disables the cache)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="ring mode: disable the frozen-trunk activation "
+                         "cache (use for streaming/non-repeating data)")
     ap.add_argument("--save", default=None)
     args = ap.parse_args()
 
@@ -192,7 +240,10 @@ def main() -> None:
                          save_path=args.save)
     else:
         out = train_ring(cfg, tc, rounds=args.rounds, n_stages=args.stages,
-                         trainer=args.trainer)
+                         trainer=args.trainer,
+                         slots_per_epoch=args.slots_per_epoch or None,
+                         cache_capacity=0 if args.no_cache
+                         else args.cache_capacity)
     print(json.dumps(out["history"][-1], default=float))
 
 

@@ -126,6 +126,49 @@ print(json.dumps({"losses": losses}))
     assert res["losses"][-1] < res["losses"][0]
 
 
+def test_ring_round_local_matches_static_owner_round():
+    """The traced-owner round (and therefore the phase_a/phase_b split it is
+    composed from — the same halves the fused executor runs) reproduces the
+    static-owner reference ``make_ring_round`` for every owner."""
+    code = PRELUDE + """
+from jax.sharding import PartitionSpec as Pspec
+boundary = 2
+local = pl.ring_round_local(cfg, n_stages=S, boundary=boundary, n_micro=M)
+
+def global_local_round(owner, stage_blocks, shared, tokens, labels):
+    def body(owner, stage_blocks, shared, tokens, labels):
+        my_blocks = jax.tree.map(lambda x: x[0], stage_blocks)
+        my_tokens = tokens[0]
+        seq_ = my_tokens.shape[2]
+        mb_ = my_tokens.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(seq_, dtype=jnp.int32)[None],
+                               (mb_, seq_))
+        shared_rest = {k: v for k, v in shared.items() if k != "head"}
+        emb_g = pl.gather_embeddings(cfg, shared_rest, my_tokens, pos)
+        l_loc = local(owner, my_blocks, shared, emb_g, labels[0])
+        return jax.lax.psum(l_loc, "stage")
+    return compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(Pspec(), Pspec("stage"), Pspec(), Pspec("stage"),
+                  Pspec("stage")),
+        out_specs=Pspec())(owner, stage_blocks, shared, tokens, labels)
+
+res = {}
+with compat.set_mesh(mesh):
+    fused = jax.jit(global_local_round)
+    for owner in range(4):
+        ref_fn = jax.jit(pl.make_ring_round(cfg, mesh, n_stages=S, owner=owner,
+                                            boundary=boundary, n_micro=M))
+        ref = ref_fn(stage_blocks, shared, tokens, labels)
+        got = fused(jnp.int32(owner), stage_blocks, shared, tokens, labels)
+        res[str(owner)] = [float(got), float(ref)]
+print(json.dumps(res))
+"""
+    res = _run_sub(code)
+    for owner, (got, want) in res.items():
+        assert abs(got - want) < 1e-4, (owner, got, want)
+
+
 def test_tick_counts():
     # PipeAdapter: fwd/bwd both M+S-1; RingAda shrinks bwd by frozen stages
     t0 = pipeline_tick_counts(4, 8, boundary=0, lps=1)
@@ -135,3 +178,9 @@ def test_tick_counts():
     assert t2["frozen_stages"] == 2
     t3 = pipeline_tick_counts(4, 8, boundary=3, lps=1)
     assert t3["bwd_ticks"] == 8
+    # actcache steady state: Phase A's M+F-1 ticks vanish, backward unchanged
+    t2c = pipeline_tick_counts(4, 8, boundary=2, lps=1, cached=True)
+    assert t2c["fwd_ticks"] == t2["fwd_ticks"] - (8 + 2 - 1)
+    assert t2c["bwd_ticks"] == t2["bwd_ticks"]
+    assert pipeline_tick_counts(4, 8, boundary=0, lps=1, cached=True) == {
+        **t0, "fwd_ticks": t0["fwd_ticks"]}

@@ -22,6 +22,40 @@ def test_schedule_matches_algorithm1():
     assert s.depth_at(4000, 12) == 12       # capped at n_layers
 
 
+def test_schedule_explicit_depths():
+    s = UnfreezeSchedule(interval=10, depths=(1, 2, 5))
+    assert s.depth_at(0, 12) == 1
+    assert s.depth_at(19, 12) == 2
+    assert s.depth_at(25, 12) == 5
+    assert s.depth_at(9999, 12) == 5          # last entry holds forever
+    assert s.depth_at(25, 3) == 3             # capped at n_blocks
+
+
+def test_schedule_rejects_non_monotone():
+    """The activation cache's invalidation contract: boundary never increases,
+    i.e. depth never shrinks. Anything else must fail loudly at construction."""
+    with pytest.raises(ValueError, match="non-monotone"):
+        UnfreezeSchedule(interval=10, depths=(1, 3, 2))
+    with pytest.raises(ValueError, match="interval"):
+        UnfreezeSchedule(interval=0)
+    with pytest.raises(ValueError, match="initial_unfreeze_depth"):
+        UnfreezeSchedule(initial_depth=0)
+    with pytest.raises(ValueError, match="depths"):
+        UnfreezeSchedule(depths=())
+
+
+def test_boundary_schedule_rejects_rising_boundary():
+    """Defense-in-depth: even a custom depth_at that shrinks depth mid-run is
+    caught when the segments are materialized."""
+    class Bad(UnfreezeSchedule):
+        def depth_at(self, step, n_blocks):
+            return 3 if step < 5 else 1        # depth shrinks: boundary rises
+
+    cfg = get_config("mbert-squad").reduced(n_layers=4, repeats=4)
+    with pytest.raises(ValueError, match="non-monotone"):
+        boundary_schedule(cfg, Bad(), 20)
+
+
 def test_depth_to_boundary_uniform():
     cfg = get_config("stablelm-3b")
     assert depth_to_boundary(cfg, 1) == 31
