@@ -7,8 +7,11 @@ Three sections:
      counts and per-executable memory (incl. donation aliasing) for the fused
      ``RingExecutor`` against the unfused ``RingTrainer``, plus the
      frozen-trunk activation cache's steady state (Phase A skipped) at the
-     highest scheduled boundary, on a 4-(host-)device ring.  Runs in a
-     subprocess so the parent process keeps its 1-device backend; invoke
+     highest scheduled boundary, on a 4-(host-)device ring — and the
+     ``repro.api.RingSession`` facade over the same cached path (the
+     facade-overhead ratio guards against the API growing a hot-loop cost).
+     Runs in a subprocess so the parent process keeps its 1-device backend;
+     invoke
      directly with ``python benchmarks/pipeline_bench.py`` or through
      ``benchmarks/run.py``.
 
@@ -131,6 +134,25 @@ with compat.set_mesh(mesh):
         "compile_counts": drv.compile_counts(),
     }
 
+    # 4. the RingSession facade over the same cached path: the API adds only
+    #    thin host-side dispatch over the same executables, so its steady
+    #    state must track the raw driver (the facade-overhead ratio is
+    #    recorded in BENCH_ring.json to catch regressions).
+    from repro.api import BenchCaptureCallback, RingSession
+    sess = RingSession.create(cfg, tc_fix, backend="cached", n_stages=S,
+                              slots_per_epoch=N_SLOTS)
+    sess.run(N_SLOTS + 1, log_every=N_SLOTS + 1)   # capture epoch + compile
+    cap = BenchCaptureCallback()
+    t0 = time.time()
+    sess.run(ROUNDS, log_every=ROUNDS, callbacks=[cap])
+    dt = time.time() - t0
+    out["steady"]["session_cached"] = {
+        "steps_per_sec": S * ROUNDS / dt,
+        "round_ms": 1e3 * dt / ROUNDS,
+        "n_executables": cap.result()["compile_count"],
+        "cache_hit_rate": cap.result().get("cache_hit_rate", 0.0),
+    }
+
     # per-executable memory analysis: the fused step aliases (donates) params +
     # moments; the reference path re-materializes grads/outputs per dispatch
     # and runs its optimizer un-donated on the host.
@@ -167,6 +189,8 @@ out["steady_speedup"] = (out["steady"]["fused"]["steps_per_sec"]
                          / out["steady"]["reference"]["steps_per_sec"])
 out["cached_speedup_vs_fused"] = (out["steady"]["cached"]["steps_per_sec"]
                                   / out["steady"]["fused"]["steps_per_sec"])
+out["session_facade_ratio"] = (out["steady"]["session_cached"]["steps_per_sec"]
+                               / out["steady"]["cached"]["steps_per_sec"])
 print(json.dumps(out))
 """
 
@@ -193,6 +217,10 @@ def bench_fused_vs_reference(log=print) -> Dict:
         log(f"  steady   {name:9s}: {r['steps_per_sec']:6.2f} steps/s "
             f"({r['round_ms']:.0f} ms/round, compile {r['compile_s']:.1f}s, "
             f"{r['n_executables']} executable(s))")
+    r = out["steady"]["session_cached"]
+    log(f"  steady   session  : {r['steps_per_sec']:6.2f} steps/s "
+        f"({r['round_ms']:.0f} ms/round) — RingSession facade at "
+        f"{out['session_facade_ratio']:.2f}x the raw cached driver")
     for key in ("fused_memory", "reference_memory"):
         if key in out:
             fm = out[key]
@@ -235,6 +263,9 @@ def write_bench_ring(out: Dict, path: str, log=print) -> Optional[Dict]:
         "speedup_fused_vs_reference": fvr["steady_speedup"],
         "speedup_cached_vs_fused": fvr["cached_speedup_vs_fused"],
         "speedup_schedule_fused_vs_reference": fvr["speedup"],
+        "session_facade_ratio": fvr.get("session_facade_ratio"),
+        "session_steps_per_sec": fvr["steady"].get(
+            "session_cached", {}).get("steps_per_sec"),
         "cache_hit_rate": cached["cache_hit_rate"],
         "compile_counts": cached["compile_counts"],
         "n_executables": {

@@ -1,10 +1,13 @@
 """End-to-end RingAda: 4 edge devices in a ring, collaborative fine-tuning.
 
-This is the paper's Fig. 2 in runnable form: 4 (virtual) devices each hold a
-span of transformer blocks + their adapters and a private local dataset;
-training rounds rotate the initiator, embeddings/activations travel the ring
-via ppermute, backward early-stops at the terminator stage, and the unfreeze
-schedule deepens every k steps.
+This is the paper's Fig. 2 in runnable form, driven through the
+``repro.api.RingSession`` facade: 4 (virtual) devices each hold a span of
+transformer blocks + their adapters and a private local dataset; training
+rounds rotate the initiator, activations travel the ring via ppermute,
+backward early-stops at the terminator stage, and the unfreeze schedule
+deepens every k steps.  The ``cached`` backend adds the frozen-trunk
+activation cache: epoch 0 captures the boundary activations per batch slot,
+later epochs skip Phase A; each boundary drop invalidates the cache.
 
     python examples/ring_finetune.py          # sets its own XLA device flag
 """
@@ -14,10 +17,8 @@ import sys
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 sys.path.insert(0, "src")
 
-import jax
-
+from repro.api import LoggingCallback, RingSession
 from repro.configs import TrainConfig, get_config
-from repro.launch.train import train_ring
 
 
 def main():
@@ -27,20 +28,21 @@ def main():
                      n_microbatches=4, unfreeze_interval=12, warmup_steps=4)
     print(f"ring of 4 devices, {cfg.n_layers} blocks -> 1 block/device, "
           f"{tc.n_microbatches} microbatches in flight")
-    # fused RingExecutor: one donated executable per boundary, metrics sync
-    # only every log_every rounds.  4 epoch-stable batch slots: epoch 0
-    # captures the frozen trunk's boundary activations, later epochs skip
-    # Phase A; each unfreeze-boundary drop invalidates the cache.
-    out = train_ring(cfg, tc, rounds=16, n_stages=4, log_every=4,
-                     slots_per_epoch=4)
-    hist = out["history"]
+    # one session call replaces the old hand-wired driver: fused executor +
+    # activation cache over 4 epoch-stable batch slots, metrics sync only
+    # every log_every rounds (async dispatch preserved).
+    sess = RingSession.create(cfg, tc, backend="cached", n_stages=4,
+                              slots_per_epoch=4)
+    hist = sess.run(16, log_every=4, callbacks=[LoggingCallback(every=4)])
     best = min(h["loss"] for h in hist)
     steps = hist[-1]["step"]
+    wall = hist[-1]["wall_s"]
     last = hist[-1]
     print(f"loss {hist[0]['loss']:.4f} -> {last['loss']:.4f} "
-          f"(best {best:.4f}) in {out['wall_s']:.1f}s "
-          f"({steps / out['wall_s']:.2f} steps/s incl. compile); "
-          f"final boundary={last['boundary']}")
+          f"(best {best:.4f}) in {wall:.1f}s "
+          f"({steps / wall:.2f} steps/s incl. compile); "
+          f"final boundary={last['boundary']}, "
+          f"{last['compile_count']} executables")
     print(f"activation cache: {last['cache_hits']:.0f} hits / "
           f"{last['cache_misses']:.0f} misses "
           f"(hit rate {last['cache_hit_rate']:.0%}), "

@@ -1,8 +1,14 @@
-"""Ablation: how the unfreeze interval k trades compute for convergence.
+"""Ablation: how the unfreeze schedule trades compute for convergence.
 
-Sweeps the paper's k (steps per adapter unfreeze) and reports final loss,
-activation-memory footprint per boundary (from memory_analysis), and wall time
-— the compute/quality trade-off behind Fig. 3(a).
+Three sections, all driven through the ``repro.api.RingSession`` facade:
+
+  1. activation-memory footprint per boundary (compiled temp bytes) — the
+     paper's early-stopped-backprop memory claim,
+  2. the paper's k-sweep (unfreeze interval vs final loss / wall time),
+  3. **policy ablation**: the paper's fixed ``IntervalPolicy`` vs the
+     adaptive ``LossPlateauPolicy`` (unfreeze the next adapter when the
+     smoothed loss plateaus), end-to-end through the same session API, with
+     the per-step boundary trace printed — monotone by contract.
 
     PYTHONPATH=src python examples/unfreeze_ablation.py
 """
@@ -12,11 +18,22 @@ sys.path.insert(0, "src")
 
 import jax
 
+from repro.api import IntervalPolicy, LossPlateauPolicy, RingSession
 from repro.configs import TrainConfig, get_config
 from repro.core import training
-from repro.launch.train import train_pjit
 from repro.models import params as prm
 from repro.optim import adamw
+
+
+def compress_trace(bs):
+    """[3,3,3,2,2,0] -> '3 x3 -> 2 x2 -> 0 x1' (run-length, readable)."""
+    runs = []
+    for b in bs:
+        if runs and runs[-1][0] == b:
+            runs[-1][1] += 1
+        else:
+            runs.append([b, 1])
+    return " -> ".join(f"{b} x{n}" for b, n in runs)
 
 
 def main():
@@ -26,7 +43,6 @@ def main():
     print("=== memory vs boundary (compiled temp bytes) ===")
     params = prm.materialize(prm.param_defs(cfg), jax.random.key(0), cfg.dtype)
     opt = adamw.init(training.full_trainable(params))
-    import jax.numpy as jnp
     batch = {"tokens": jax.random.randint(jax.random.key(1), (8, 64), 0,
                                           cfg.vocab_size),
              "labels": jax.random.randint(jax.random.key(2), (8, 64), 0,
@@ -38,16 +54,36 @@ def main():
         print(f"  boundary={b} (depth {cfg.repeats - b:2d}): "
               f"temp={mem.temp_size_in_bytes / 2**20:6.1f} MiB")
 
-    print("=== convergence vs unfreeze interval k ===")
+    print("=== convergence vs unfreeze interval k (IntervalPolicy) ===")
     for k in (4, 8, 1_000_000):
         label = f"k={k}" if k < 1_000_000 else "k=inf (top-1 only)"
         tc = TrainConfig(learning_rate=2e-3, batch_size=8, seq_len=64,
                          unfreeze_interval=k, warmup_steps=2)
-        out = train_pjit(cfg, tc, steps=steps, log_every=steps,
-                         scheme="ringada", log=lambda *a: None)
-        h = out["history"][-1]
+        sess = RingSession.create(cfg, tc, backend="pjit")
+        hist = sess.run(steps, log_every=steps)
+        h = hist[-1]
         print(f"  {label:22s} final_loss={h['loss']:.4f} "
-              f"final_depth={h['depth']:2d} wall={out['wall_s']:.1f}s")
+              f"final_depth={h['depth']:2d} wall={h['wall_s']:.1f}s")
+
+    print("=== policy ablation: IntervalPolicy vs LossPlateauPolicy ===")
+    tc = TrainConfig(learning_rate=2e-3, batch_size=8, seq_len=64,
+                     unfreeze_interval=8, warmup_steps=2)
+    policies = {
+        "interval(k=8)": IntervalPolicy(initial_depth=1, interval=8),
+        "plateau(p=2)": LossPlateauPolicy(initial_depth=1, patience=2,
+                                          min_rel_improve=5e-3),
+    }
+    for name, policy in policies.items():
+        sess = RingSession.create(cfg, tc, backend="pjit", policy=policy)
+        hist = sess.run(steps, log_every=steps)
+        trace = [h["boundary"] for h in hist]
+        assert all(a >= b for a, b in zip(trace, trace[1:])), \
+            f"boundary trace not monotone: {trace}"
+        h = hist[-1]
+        print(f"  {name:14s} final_loss={h['loss']:.4f} "
+              f"final_depth={h['depth']:2d} wall={h['wall_s']:.1f}s "
+              f"compiles={h['compile_count']}")
+        print(f"    boundary trace (monotone): {compress_trace(trace)}")
 
 
 if __name__ == "__main__":

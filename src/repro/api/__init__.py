@@ -1,0 +1,26 @@
+"""repro.api — the pluggable training facade.
+
+``RingSession`` drives any :mod:`~repro.api.backends` adapter (reference /
+fused / cached ring, pjit) under any :mod:`~repro.api.policies` unfreeze
+policy (paper k-rule, explicit depths, loss-plateau-adaptive), emits
+structured :class:`~repro.api.metrics.RoundMetrics`, and checkpoints the
+complete resumable state.  See each module's docstring for the protocol
+contracts (monotone boundary, donation, cache invalidation).
+"""
+from .backends import (CachedBackend, FusedBackend, PjitBackend,
+                       ReferenceBackend)
+from .data import PjitDataSource, RingDataSource
+from .metrics import (BenchCaptureCallback, Callback, CheckpointCallback,
+                      LoggingCallback, RoundMetrics)
+from .policies import (ExplicitPolicy, IntervalPolicy, LossPlateauPolicy,
+                       resolve_policy)
+from .session import BACKENDS, RingSession
+
+__all__ = [
+    "RingSession", "BACKENDS",
+    "ReferenceBackend", "FusedBackend", "CachedBackend", "PjitBackend",
+    "IntervalPolicy", "ExplicitPolicy", "LossPlateauPolicy", "resolve_policy",
+    "RoundMetrics", "Callback", "LoggingCallback", "CheckpointCallback",
+    "BenchCaptureCallback",
+    "RingDataSource", "PjitDataSource",
+]

@@ -1,0 +1,284 @@
+"""Backend adapters: one ``step`` protocol over every training path.
+
+The seed repo grew four divergent drivers — the unfused ``RingTrainer``
+oracle, the fused ``RingExecutor``, the executor + ``ActivationCache``
+combination, and the pjit staged-recompile loop — each hand-wired in
+``launch/train.py``.  A :class:`Backend` adapts each one to a single surface
+the :class:`~repro.api.session.RingSession` can drive:
+
+    class Backend(Protocol):
+        kind: str                 # "ring" | "pjit" (selects the data source)
+        name: str                 # CLI/back-compat name
+        steps_per_call: int       # global steps one step() advances
+        compile_count: int        # executables built so far
+        def step(self, batch) -> dict           # raw metrics (may hold device arrays)
+        def state(self) -> dict                 # {"format", "params", "opt"}
+        def load_state(self, params, opt, *, step) -> None
+        def export_params(self) -> params tree  # canonical [R, ...] layout
+
+Protocol contracts every adapter honors:
+
+  * **monotone boundary** — the backend evaluates its (injected) policy's
+    ``depth_at`` per step/round; the resulting boundary may never increase
+    (re-checked here and in ``core/executor.py``);
+  * **donation** — fused/pjit steps donate params + optimizer moments, so a
+    caller must treat the trees it handed in as consumed; ``state()`` always
+    returns the LIVE trees;
+  * **cache invalidation** — the cached backend's activation cache is keyed
+    ``(slot, boundary)`` and cleared wholesale on every boundary drop and on
+    ``load_state`` (a restored session never serves pre-restore activations).
+
+``state()["format"]`` tags the optimizer-state layout (ring moments are
+stage-stacked ``[S, lps, ...]``; pjit moments are full-size ``[R, ...]`` per
+pattern entry).  Checkpoints restore only into a backend with the same
+format — the session raises a clear error instead of silently reshaping
+moments across families.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import pipeline as pl
+from repro.core import training
+from repro.core.unfreeze import depth_to_boundary
+from repro.models import params as prm
+from repro.optim import adamw
+
+CACHE_STAT_KEYS = ("cache_hits", "cache_misses", "cache_hit_rate",
+                   "cache_evictions", "cache_invalidations", "cache_bypasses",
+                   "cache_entries", "cache_capacity")
+
+
+def _default_params(cfg: ModelConfig, tc: TrainConfig):
+    return prm.materialize(prm.param_defs(cfg), jax.random.key(tc.seed),
+                           cfg.dtype)
+
+
+def _validate_ring(cfg: ModelConfig, n_stages: int) -> None:
+    """The ring-mode preconditions that used to live in launch/train.py."""
+    if cfg.head_out is not None:
+        raise ValueError(
+            f"ring backends train with the LM objective, but this config has "
+            f"a task head (head_out={cfg.head_out}) — the loss would be "
+            f"garbage/NaN. Use an LM config, or reduce with head_out=None "
+            f"like examples/ring_finetune.py.")
+    if cfg.repeats % n_stages != 0:
+        raise ValueError(
+            f"ring training needs repeats divisible by stages: "
+            f"cfg.repeats={cfg.repeats}, n_stages={n_stages}. Pick n_stages "
+            f"from the divisors of {cfg.repeats}, or a config/reduced "
+            f"variant with more repeats.")
+
+
+class _RingBackendBase:
+    """Shared plumbing for the three ring adapters (mesh, batch unpacking,
+    canonical <-> stage-stacked param translation, opt-state format tag)."""
+
+    kind = "ring"
+
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig, policy, *,
+                 n_stages: int, params: Optional[Dict[str, Any]] = None):
+        from repro.launch.mesh import make_ring_mesh, require_devices
+
+        _validate_ring(cfg, n_stages)
+        require_devices(n_stages)
+        self.cfg, self.tc, self.policy = cfg, tc, policy
+        self.S = n_stages
+        self.mesh = make_ring_mesh(n_stages)
+        self._init_params = params if params is not None else _default_params(cfg, tc)
+
+    # -- shared surface -------------------------------------------------
+    @property
+    def steps_per_call(self) -> int:
+        return self.S                      # one round = S initiator steps
+
+    @property
+    def format(self) -> str:
+        return f"ring/S{self.S}"
+
+    def export_params(self) -> Dict[str, Any]:
+        return self.driver.export_params()
+
+    @staticmethod
+    def _unpack(batch) -> Tuple[Optional[int], Any, Any]:
+        if len(batch) == 3:
+            return batch
+        tokens, labels = batch
+        return None, tokens, labels
+
+    def _depth_of(self, boundary: int) -> int:
+        return self.cfg.repeats - boundary
+
+    def _restack(self, params: Dict[str, Any]) -> None:
+        d = self.driver
+        d.stage_blocks, d.shared = pl.stage_stack(params, self.cfg, self.S)
+        d._params_rest = {k: v for k, v in params.items() if k != "blocks"}
+
+
+class ReferenceBackend(_RingBackendBase):
+    """The unfused ``RingTrainer`` oracle: S dispatches per round, host-side
+    optimizer, one loss sync per iteration (metrics are host floats)."""
+
+    name = "reference"
+
+    def __init__(self, cfg, tc, policy, *, n_stages: int, params=None):
+        from repro.core.ring import RingTrainer
+
+        super().__init__(cfg, tc, policy, n_stages=n_stages, params=params)
+        self.driver = RingTrainer(cfg, tc, self.mesh, self._init_params,
+                                  n_stages, tc.n_microbatches, schedule=policy)
+
+    @property
+    def compile_count(self) -> int:
+        return self.driver.n_executables
+
+    def step(self, batch) -> Dict[str, Any]:
+        _, tokens, labels = self._unpack(batch)
+        with compat.set_mesh(self.mesh):
+            m = self.driver.round(tokens, labels)
+        return {"loss": m["loss"], "boundary": m["boundary"],
+                "depth": self._depth_of(m["boundary"]), "step": m["step"],
+                "tokens": int(tokens.size)}
+
+    def state(self) -> Dict[str, Any]:
+        d = self.driver
+        opt = {"m": {"adapter": d.m_ad, "head": d.m_hd},
+               "v": {"adapter": d.v_ad, "head": d.v_hd},
+               "count": jnp.int32(d.step)}
+        return {"format": self.format, "params": self.export_params(),
+                "opt": opt}
+
+    def load_state(self, params, opt, *, step: int) -> None:
+        self._restack(params)
+        d = self.driver
+        d.m_ad, d.m_hd = opt["m"]["adapter"], opt["m"]["head"]
+        d.v_ad, d.v_hd = opt["v"]["adapter"], opt["v"]["head"]
+        d.step = step
+
+
+class FusedBackend(_RingBackendBase):
+    """The fused ``RingExecutor``: one donated executable per boundary,
+    metrics stay on device until the session materializes them."""
+
+    name = "fused"
+
+    def __init__(self, cfg, tc, policy, *, n_stages: int, params=None,
+                 cache_capacity: int = 0):
+        from repro.core.executor import RingExecutor
+
+        super().__init__(cfg, tc, policy, n_stages=n_stages, params=params)
+        self.driver = RingExecutor(cfg, tc, self.mesh, self._init_params,
+                                   n_stages, tc.n_microbatches,
+                                   cache_capacity=cache_capacity,
+                                   schedule=policy)
+
+    @property
+    def compile_count(self) -> int:
+        return self.driver.n_executables
+
+    def step(self, batch) -> Dict[str, Any]:
+        slot, tokens, labels = self._unpack(batch)
+        with compat.set_mesh(self.mesh):
+            m = self.driver.round(tokens, labels, slot=slot)
+        raw = {"loss": m["loss"], "boundary": m["boundary"],
+               "depth": self._depth_of(m["boundary"]), "step": m["step"],
+               "tokens": int(tokens.size),
+               "extras": {"losses": m["losses"]}}
+        if self.driver.cache is not None:
+            raw["cache"] = {k: m[k] for k in CACHE_STAT_KEYS}
+            raw["cache_hit"] = m["cache_hit"]
+        return raw
+
+    def state(self) -> Dict[str, Any]:
+        return {"format": self.format, "params": self.export_params(),
+                "opt": self.driver.opt_state}
+
+    def load_state(self, params, opt, *, step: int) -> None:
+        self._restack(params)
+        d = self.driver
+        d.opt_state = opt
+        d.step = step
+        d._last_boundary = None            # monotone check re-seeds post-load
+        if d.cache is not None:
+            d.cache.invalidate()           # never serve pre-restore activations
+
+
+class CachedBackend(FusedBackend):
+    """Fused executor + the frozen-trunk activation cache (Phase-A skip).
+
+    Requires slot-keyed batches (``slots_per_epoch`` on the data source) —
+    streaming draws would never revisit a key, so constructing this backend
+    without a positive capacity is an error rather than a silent no-op.
+    """
+
+    name = "cached"
+
+    def __init__(self, cfg, tc, policy, *, n_stages: int, cache_capacity: int,
+                 params=None):
+        if cache_capacity < 1:
+            raise ValueError(
+                f"CachedBackend needs cache_capacity >= 1 (got "
+                f"{cache_capacity}); use FusedBackend for uncached rounds")
+        super().__init__(cfg, tc, policy, n_stages=n_stages, params=params,
+                         cache_capacity=cache_capacity)
+
+
+class PjitBackend:
+    """The staged-recompile pjit path: single- or multi-device data/tensor
+    parallel steps, one jitted+donated step fn per distinct boundary."""
+
+    kind = "pjit"
+    name = "pjit"
+    steps_per_call = 1
+
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig, policy, *,
+                 impl: str = "jnp", params: Optional[Dict[str, Any]] = None):
+        self.cfg, self.tc, self.policy = cfg, tc, policy
+        self.impl = impl
+        self._params = params if params is not None else _default_params(cfg, tc)
+        self._opt = adamw.init(training.full_trainable(self._params))
+        self._fns: Dict[int, Any] = {}      # boundary -> jitted step
+        self._step = 0
+
+    @property
+    def format(self) -> str:
+        return "pjit"
+
+    @property
+    def compile_count(self) -> int:
+        return len(self._fns)
+
+    def _fn(self, boundary: int):
+        if boundary not in self._fns:
+            fn = training.make_step(self.cfg, self.tc, boundary,
+                                    impl=self.impl)
+            self._fns[boundary] = jax.jit(fn, donate_argnums=(0, 1))
+        return self._fns[boundary]
+
+    def step(self, batch: Dict[str, Any]) -> Dict[str, Any]:
+        depth = self.policy.depth_at(self._step, self.cfg.n_layers)
+        boundary = depth_to_boundary(self.cfg, depth)
+        self._params, self._opt, metrics = self._fn(boundary)(
+            self._params, self._opt, batch)
+        self._step += 1
+        extras = {k: v for k, v in metrics.items() if k != "loss"}
+        return {"loss": metrics["loss"], "boundary": boundary, "depth": depth,
+                "step": self._step, "tokens": int(batch["tokens"].size),
+                "extras": extras}
+
+    def export_params(self) -> Dict[str, Any]:
+        return self._params
+
+    def state(self) -> Dict[str, Any]:
+        return {"format": self.format, "params": self._params,
+                "opt": self._opt}
+
+    def load_state(self, params, opt, *, step: int) -> None:
+        self._params = params
+        self._opt = opt
+        self._step = step

@@ -1,0 +1,70 @@
+"""Session data sources: checkpointable wrappers over ``repro.data.pipeline``.
+
+A data source yields backend-shaped batches and can serialize its host-side
+cursor (numpy bit-generator state + slot cursor) into JSON-able state, so a
+restored session replays EXACTLY the batch sequence the interrupted run would
+have seen — the piece that makes ``RingSession.save``/``restore``
+bit-reproducible end to end.
+
+Batch shapes:
+  * ring backends consume ``(slot, tokens, labels)`` triples with
+    tokens/labels ``[S, M, mb, seq]`` (slot is None for streaming draws);
+  * the pjit backend consumes the flat dict batches of ``data.pipeline.Batcher``
+    (``{"tokens", "labels"}`` or the QA ``{"tokens", "starts", "ends"}``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data.pipeline import (Batcher, RingBatcher, make_client_datasets,
+                                 merged)
+
+
+class RingDataSource:
+    """Per-client ring batches; slot-keyed when ``slots_per_epoch`` is set
+    (the activation cache's key contract)."""
+
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig, n_stages: int, *,
+                 slots_per_epoch: Optional[int] = None, n_per_client: int = 128):
+        clients = make_client_datasets(n_stages, vocab=cfg.vocab_size,
+                                       n_per_client=n_per_client,
+                                       seq=tc.seq_len, seed=tc.seed)
+        self.rb = RingBatcher(clients, tc.n_microbatches, tc.batch_size,
+                              seed=tc.seed, slots_per_epoch=slots_per_epoch)
+
+    def next(self) -> Tuple[Optional[int], Any, Any]:
+        if self.rb.slots_per_epoch:
+            return self.rb.next_slot()
+        tokens, labels = self.rb.next()
+        return None, tokens, labels
+
+    def state(self) -> Dict[str, Any]:
+        return {"rng": self.rb.rng.bit_generator.state, "t": self.rb._t}
+
+    def load_state(self, state: Dict[str, Any]) -> None:
+        self.rb.rng.bit_generator.state = state["rng"]
+        self.rb._t = int(state["t"])
+
+
+class PjitDataSource:
+    """Merged-client flat batches for the pjit backend (QA or LM, matching
+    the config's head)."""
+
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig, *,
+                 n_clients: int = 4, n_per_client: int = 256):
+        qa = cfg.head_out == 2
+        ds = merged(make_client_datasets(n_clients, vocab=cfg.vocab_size,
+                                         n_per_client=n_per_client,
+                                         seq=tc.seq_len, seed=tc.seed,
+                                         kind="qa" if qa else "lm"))
+        self.batcher = Batcher(ds, tc.batch_size, seed=tc.seed)
+
+    def next(self) -> Dict[str, Any]:
+        return self.batcher.next()
+
+    def state(self) -> Dict[str, Any]:
+        return {"rng": self.batcher.rng.bit_generator.state}
+
+    def load_state(self, state: Dict[str, Any]) -> None:
+        self.batcher.rng.bit_generator.state = state["rng"]

@@ -1,0 +1,283 @@
+"""RingSession: ONE pluggable training API over backends, policies, caching.
+
+The paper's system is one coherent loop — ring pipeline, top-down scheduled
+unfreezing, early-stopped backprop — and this facade is its single entry
+point.  Every execution path is a :mod:`~repro.api.backends` adapter, every
+unfreeze rule a :mod:`~repro.api.policies` policy, and a new scenario is a
+~50-line plugin instead of a new driver:
+
+    from repro.api import RingSession, LossPlateauPolicy
+
+    sess = RingSession.create(cfg, tc, backend="cached", slots_per_epoch=8,
+                              policy=LossPlateauPolicy(patience=3))
+    history = sess.run(64, log_every=8)        # list of metric dicts
+    sess.save("ckpt/ring")                     # params + Adam moments +
+                                               # policy + data cursor
+    sess2 = RingSession.restore("ckpt/ring", cfg, tc,
+                                policy=LossPlateauPolicy(patience=3))
+    sess2.run(64)                              # continues bit-identically
+
+Contracts the session enforces (on top of the per-backend ones documented in
+``backends.py``):
+
+  * **monotone boundary** — the boundary reported by every step may never
+    increase, whatever policy produced it; violations raise immediately
+    (the activation cache's invalidation model depends on this, see
+    ``core/unfreeze.py``);
+  * **async metrics** — fused-backend metrics stay on device between logging
+    intervals; ``run`` materializes them in batches.  A loss-driven policy
+    (``wants_loss=True``) opts into one host sync per round — the documented
+    price of adaptive unfreezing;
+  * **bit-reproducible resume** — ``save`` persists params, optimizer
+    moments, the policy's host state, the data cursor, and the step counter;
+    ``restore`` + ``run`` replays exactly what the uninterrupted run would
+    have produced (pinned by tests/test_api_session.py).
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import ModelConfig, TrainConfig
+
+from .backends import (CachedBackend, FusedBackend, PjitBackend,
+                       ReferenceBackend)
+from .data import PjitDataSource, RingDataSource
+from .metrics import Callback, RoundMetrics
+from .policies import resolve_policy
+
+BACKENDS = {"reference": ReferenceBackend, "fused": FusedBackend,
+            "cached": CachedBackend, "pjit": PjitBackend}
+
+
+class RingSession:
+    """Facade over (backend, policy, data); build with :meth:`create` or
+    :meth:`restore`, drive with :meth:`step` / :meth:`run`."""
+
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig, backend, policy,
+                 data, *, callbacks: Sequence[Callback] = (),
+                 create_args: Optional[Dict[str, Any]] = None):
+        self.cfg, self.tc = cfg, tc
+        self.backend, self.policy, self.data = backend, policy, data
+        self.callbacks: List[Callback] = list(callbacks)
+        self.step_count = 0
+        self._last_boundary: Optional[int] = None
+        self._create_args = create_args or {"backend": backend.name}
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def create(cls, cfg: ModelConfig, tc: TrainConfig, *,
+               backend: Any = "fused", policy: Any = None,
+               n_stages: Optional[int] = None,
+               slots_per_epoch: Optional[int] = None,
+               cache_capacity: Optional[int] = None,
+               impl: str = "jnp", params: Optional[Dict[str, Any]] = None,
+               data: Any = None, callbacks: Sequence[Callback] = (),
+               log=print) -> "RingSession":
+        """Wire a session from names: backend in {'pjit', 'reference',
+        'fused', 'cached'} (or a ready Backend instance), policy in
+        {'interval', 'plateau', None=paper rule} (or an UnfreezePolicy).
+
+        ``cached`` needs ``slots_per_epoch`` (the cache's key space);
+        ``cache_capacity`` defaults to it.  ``data=None`` builds the standard
+        synthetic per-client datasets exactly as ``launch/train.py`` always
+        did, so session runs are comparable to the seed drivers.
+        """
+        policy = resolve_policy(policy, tc)
+        S = n_stages or tc.n_stages
+        if isinstance(backend, str):
+            if backend not in BACKENDS:
+                raise ValueError(f"unknown backend {backend!r}; "
+                                 f"known: {sorted(BACKENDS)}")
+            if backend == "pjit":
+                be = PjitBackend(cfg, tc, policy, impl=impl, params=params)
+            elif backend == "cached":
+                if not slots_per_epoch:
+                    raise ValueError(
+                        "backend='cached' needs slots_per_epoch >= 1: the "
+                        "activation cache keys on stable batch slots — with "
+                        "streaming draws no key ever repeats. Use "
+                        "backend='fused' for non-repeating data.")
+                cap = (cache_capacity if cache_capacity is not None
+                       else slots_per_epoch)
+                if 0 < cap < slots_per_epoch:
+                    # round-robin slots + LRU: every slot is evicted before
+                    # its revisit — all capture cost, zero hits
+                    log(f"WARNING: cache_capacity {cap} < slots_per_epoch "
+                        f"{slots_per_epoch}: the cache will thrash (0% hits, "
+                        f"capture overhead every round) — raise the capacity "
+                        f"or use backend='fused'")
+                be = CachedBackend(cfg, tc, policy, n_stages=S,
+                                   cache_capacity=cap, params=params)
+            else:
+                be = BACKENDS[backend](cfg, tc, policy, n_stages=S,
+                                       params=params)
+        else:
+            be = backend
+            # a ready instance already embeds the policy that drives its
+            # schedule — that object MUST also be the one the session
+            # observes losses into, or a loss-driven policy would never
+            # unfreeze (and the monotone check would blame the wrong rule).
+            policy = getattr(be, "policy", policy)
+            if isinstance(be, CachedBackend) and data is None \
+                    and not slots_per_epoch:
+                raise ValueError(
+                    "a CachedBackend needs slot-keyed batches: pass "
+                    "slots_per_epoch (for the default data source) or a "
+                    "slot-yielding data= — with streaming draws every round "
+                    "would silently bypass the cache (0% hits)")
+        if data is None:
+            data = (PjitDataSource(cfg, tc) if be.kind == "pjit"
+                    else RingDataSource(cfg, tc, getattr(be, "S", S),
+                                        slots_per_epoch=slots_per_epoch))
+        create_args = {"backend": be.name, "n_stages": getattr(be, "S", None),
+                       "slots_per_epoch": slots_per_epoch,
+                       "cache_capacity": cache_capacity, "impl": impl}
+        return cls(cfg, tc, be, policy, data, callbacks=callbacks,
+                   create_args=create_args)
+
+    # ------------------------------------------------------------------
+    def step(self, batch: Any = None) -> RoundMetrics:
+        """One backend step (a full ring round for ring backends, one
+        optimizer step for pjit).  Returns possibly-device metrics; call
+        ``.materialize()`` (or use :meth:`run`) to host-sync them."""
+        if batch is None:
+            batch = self.data.next()
+        raw = self.backend.step(batch)
+        boundary = raw["boundary"]
+        if self._last_boundary is not None and boundary > self._last_boundary:
+            raise RuntimeError(
+                f"unfreeze boundary increased {self._last_boundary} -> "
+                f"{boundary} at step {raw['step']} (policy "
+                f"{self.policy!r}): RingAda schedules are monotone top-down "
+                f"and the activation cache's invalidation contract depends "
+                f"on it (see core/unfreeze.py)")
+        self._last_boundary = boundary
+        self.step_count = raw["step"]
+        m = RoundMetrics(step=raw["step"], boundary=boundary,
+                         depth=raw["depth"], loss=raw["loss"],
+                         compile_count=self.backend.compile_count,
+                         tokens=raw.get("tokens", 0),
+                         cache=raw.get("cache"),
+                         cache_hit=raw.get("cache_hit"),
+                         extras=raw.get("extras", {}))
+        if self.policy.wants_loss:
+            m = m.materialize()            # adaptive policies pay 1 sync/round
+            self.policy.observe(self.step_count, m.loss)
+        return m
+
+    def run(self, steps: int, *, log_every: int = 1,
+            callbacks: Optional[Sequence[Callback]] = None,
+            ) -> List[Dict[str, Any]]:
+        """Drive ``steps`` backend steps off the session's data source.
+
+        Metrics are materialized once per ``log_every`` interval (the fused
+        async-dispatch contract) and EVERY step lands in the returned history
+        (as flat dicts).  Callbacks fire per materialized step.
+        """
+        cbs = self.callbacks + list(callbacks or [])
+        for cb in cbs:
+            cb.on_start(self)
+        history: List[Dict[str, Any]] = []
+        pending: List[RoundMetrics] = []
+        t0 = last_t = time.time()
+        tokens_acc = 0
+
+        def flush():
+            nonlocal last_t, tokens_acc
+            now = time.time()
+            dt = now - last_t
+            tps = tokens_acc / dt if dt > 0 and tokens_acc else None
+            for pm in pending:
+                mm = pm.materialize(wall_s=round(now - t0, 2),
+                                    tokens_per_sec=tps)
+                history.append(mm.to_dict())
+                for cb in cbs:
+                    cb.on_round(self, mm)
+            pending.clear()
+            last_t, tokens_acc = now, 0
+
+        for i in range(steps):
+            m = self.step()
+            pending.append(m)
+            tokens_acc += m.tokens
+            if i % log_every == 0 or i == steps - 1:
+                flush()
+        flush()
+        for cb in cbs:
+            cb.on_end(self, history)
+        return history
+
+    # ------------------------------------------------------------------
+    def export_params(self) -> Dict[str, Any]:
+        """Canonical full param tree ([R, ...] block stack), any backend."""
+        return self.backend.export_params()
+
+    def save(self, path: str) -> None:
+        """Persist the complete resumable state: params + Adam moments (via
+        ``checkpoint.save(..., opt_state=...)``), the policy's host state,
+        the data cursor, and the step counter.  Adapter-only params payload
+        (the backbone is frozen + seed-derived, so it reconstructs exactly)."""
+        st = self.backend.state()
+        extra = {
+            "session": "RingSession/v1",
+            "format": st["format"],
+            "seed": self.tc.seed,
+            "last_boundary": self._last_boundary,
+            "policy": {"type": type(self.policy).__name__,
+                       "state": self.policy.state()},
+            "data": self.data.state(),
+            **self._create_args,
+        }
+        ckpt.save(path, st["params"], step=self.step_count,
+                  opt_state=st["opt"], adapters_only=True, extra=extra)
+
+    def load(self, path: str) -> "RingSession":
+        """Load a checkpoint into this (freshly created, same-config)
+        session.  Raises on backend-format or policy-type mismatch instead of
+        silently reinterpreting moments."""
+        st = self.backend.state()
+        params, meta = ckpt.restore(path, st["params"])
+        ex = meta["extra"]
+        if ex.get("format") != st["format"]:
+            raise ValueError(
+                f"checkpoint {path!r} was saved by a {ex.get('format')!r} "
+                f"backend but this session runs {st['format']!r} — optimizer "
+                f"moments are laid out per-format (stage-stacked vs full-"
+                f"size) and cannot be reinterpreted across families. "
+                f"Recreate the session with the saved backend.")
+        saved_policy = ex.get("policy", {})
+        if saved_policy.get("type") != type(self.policy).__name__:
+            raise ValueError(
+                f"checkpoint {path!r} was driven by policy "
+                f"{saved_policy.get('type')!r} but this session has "
+                f"{type(self.policy).__name__!r} — pass the matching policy "
+                f"to restore() so the depth sequence continues correctly.")
+        opt = ckpt.restore_opt(path, st["opt"])
+        self.backend.load_state(params, opt, step=meta["step"])
+        self.policy.load_state(saved_policy.get("state", {}))
+        self.data.load_state(ex["data"])
+        self.step_count = meta["step"]
+        self._last_boundary = ex.get("last_boundary")
+        return self
+
+    @classmethod
+    def restore(cls, path: str, cfg: ModelConfig, tc: TrainConfig, *,
+                policy: Any = None, backend: Any = None,
+                **create_kwargs) -> "RingSession":
+        """Rebuild a session from a checkpoint.  Backend/shape arguments
+        default to what the checkpoint recorded; the policy must be supplied
+        with the same type it was saved with (its host state is restored)."""
+        with open(path + ".json") as f:
+            meta = json.load(f)
+        ex = meta["extra"]
+        if backend is None:
+            backend = ex.get("backend", "fused")
+        for k in ("n_stages", "slots_per_epoch", "cache_capacity", "impl"):
+            if k in ex and ex[k] is not None:
+                create_kwargs.setdefault(k, ex[k])
+        sess = cls.create(cfg, tc, backend=backend, policy=policy,
+                          **create_kwargs)
+        return sess.load(path)

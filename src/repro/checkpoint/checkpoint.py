@@ -1,8 +1,15 @@
 """Checkpointing: flat-key .npz payloads + JSON metadata, sharding-aware restore.
 
-PEFT-aware: ``save_adapters_only=True`` stores just the trainable set (adapters +
+PEFT-aware: ``adapters_only=True`` stores just the trainable set (adapters +
 head + step), which is what RingAda clients would persist/exchange — a few MB even
 for a 7B backbone.
+
+Optimizer state rides along: pass ``opt_state=`` to :func:`save` and it is
+stored under a reserved ``opt::`` key namespace (NEVER filtered by
+``adapters_only`` — the moments exist only for the trainable set, so they are
+part of the minimal resumable state, and dropping them silently would make a
+"resumed" run diverge from the uninterrupted one).  :func:`restore_opt` is the
+inverse.
 """
 from __future__ import annotations
 
@@ -33,11 +40,20 @@ def _key_filter(key: str, adapters_only: bool) -> bool:
     return ("adapter" in key.split(SEP)) or key.startswith("head")
 
 
+OPT_NS = "opt"       # reserved top-level namespace for optimizer-state keys
+
+
 def save(path: str, params: Any, *, step: int = 0, extra: Optional[Dict] = None,
-         adapters_only: bool = False) -> None:
+         adapters_only: bool = False, opt_state: Any = None) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = {k: v for k, v in _flatten(params).items()
             if _key_filter(k, adapters_only)}
+    if opt_state is not None:
+        # opt state is exempt from the adapters_only filter: the moments only
+        # cover the trainable set in the first place, and a checkpoint without
+        # them cannot resume bit-identically.
+        flat.update({OPT_NS + SEP + k: v
+                     for k, v in _flatten(opt_state).items()})
     # bfloat16 isn't npz-native: store raw uint16 + dtype tag
     payload, dtypes = {}, {}
     for k, v in flat.items():
@@ -49,7 +65,7 @@ def save(path: str, params: Any, *, step: int = 0, extra: Optional[Dict] = None,
             dtypes[k] = str(v.dtype)
     np.savez(path + ".npz", **payload)
     meta = {"step": step, "dtypes": dtypes, "adapters_only": adapters_only,
-            "extra": extra or {}}
+            "has_opt_state": opt_state is not None, "extra": extra or {}}
     with open(path + ".json", "w") as f:
         json.dump(meta, f)
 
@@ -64,6 +80,34 @@ def restore(path: str, like: Any, *, mesh=None, specs: Any = None,
     with open(path + ".json") as f:
         meta = json.load(f)
     data = np.load(path + ".npz")
+    return _restore_into(like, data, meta, prefix="", mesh=mesh,
+                         specs=specs), meta
+
+
+def restore_opt(path: str, opt_like: Any) -> Any:
+    """Restore the optimizer state saved via ``save(..., opt_state=...)``.
+
+    ``opt_like`` supplies the pytree structure + leaf shapes (e.g. a freshly
+    ``adamw.init``-ed state).  Raises if the checkpoint carries no opt state,
+    and raises on ANY ``opt_like`` leaf missing from the payload (strict —
+    unlike the params path there is no legitimate "reconstruct from seed"
+    fallback for moments): a silently part-restored optimizer is exactly the
+    resume-divergence bug this API exists to prevent.
+    """
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    if not meta.get("has_opt_state"):
+        raise ValueError(
+            f"checkpoint {path!r} has no optimizer state (saved before the "
+            f"opt round-trip existed, or with opt_state=None) — resuming "
+            f"from it would silently reset the Adam moments")
+    data = np.load(path + ".npz")
+    return _restore_into(opt_like, data, meta, prefix=OPT_NS + SEP,
+                         strict=True)
+
+
+def _restore_into(like: Any, data, meta: Dict, *, prefix: str = "",
+                  mesh=None, specs: Any = None, strict: bool = False) -> Any:
     flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     spec_leaves = (jax.tree.leaves(specs, is_leaf=lambda s: s is None or
                                    hasattr(s, "__len__") or True)
@@ -71,8 +115,8 @@ def restore(path: str, like: Any, *, mesh=None, specs: Any = None,
 
     out = []
     for i, (pathk, leaf) in enumerate(flat_like):
-        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in pathk)
+        key = prefix + SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                                for p in pathk)
         if key in data.files:
             arr = data[key]
             if meta["dtypes"].get(key) == "bfloat16":
@@ -85,5 +129,14 @@ def restore(path: str, like: Any, *, mesh=None, specs: Any = None,
                 arr = jnp.asarray(arr)
             out.append(arr)
         else:
+            if strict:
+                # the missing-key fallback is only correct for the
+                # adapters_only params path (frozen leaves reconstruct from
+                # the seed); optimizer moments silently reset to the live
+                # values would make a "resumed" run diverge without error
+                raise KeyError(
+                    f"checkpoint is missing key {key!r} for the requested "
+                    f"tree (layout mismatch between the checkpoint and this "
+                    f"session — different adamw/backend structure?)")
             out.append(leaf)
-    return jax.tree.unflatten(treedef, out), meta
+    return jax.tree.unflatten(treedef, out)

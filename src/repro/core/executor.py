@@ -60,6 +60,17 @@ Array = jax.Array
 FUSED_MODES = ("direct", "capture", "cached")
 
 
+def scalarize(v: Any) -> Any:
+    """Device metric value -> host scalar / list (non-arrays pass through).
+
+    The ONE materialization rule for async metrics — shared by
+    ``RingExecutor.materialize_metrics`` and ``repro.api.metrics``.
+    """
+    if isinstance(v, jax.Array):
+        return float(v) if v.ndim == 0 else [float(x) for x in v]
+    return v
+
+
 def ring_opt_init(stage_blocks: Dict[str, Any], shared: Dict[str, Any]
                   ) -> Dict[str, Any]:
     """Ring optimizer state: adapter moments stage-stacked [S, lps, ...]
@@ -242,7 +253,8 @@ class RingExecutor:
 
     def __init__(self, cfg: ModelConfig, tc: TrainConfig, mesh: Mesh,
                  params: Dict[str, Any], n_stages: int, n_micro: int, *,
-                 donate: bool = True, cache_capacity: int = 0):
+                 donate: bool = True, cache_capacity: int = 0,
+                 schedule: Optional[Any] = None):
         assert len(cfg.pattern) == 1, "ring executor needs a uniform pattern"
         self.cfg, self.tc, self.mesh = cfg, tc, mesh
         self.S, self.M = n_stages, n_micro
@@ -251,7 +263,12 @@ class RingExecutor:
         self._params_rest = {k: v for k, v in params.items()
                              if k not in ("blocks",)}
         self.opt_state = ring_opt_init(self.stage_blocks, self.shared)
-        self.sched = UnfreezeSchedule.from_train_config(tc)
+        # Any object with ``depth_at(step, n_blocks) -> int`` works here
+        # (repro.api's UnfreezePolicy protocol); the monotone-boundary
+        # contract is still re-checked at runtime in ``round`` regardless of
+        # who supplies the depths.
+        self.sched = (schedule if schedule is not None
+                      else UnfreezeSchedule.from_train_config(tc))
         self.donate = donate
         self.cache: Optional[ActivationCache] = None
         if cache_capacity:
@@ -366,15 +383,7 @@ class RingExecutor:
     @staticmethod
     def materialize_metrics(m: Dict[str, Any]) -> Dict[str, Any]:
         """Host-sync a metrics dict (the once-per-logging-interval sync)."""
-        out: Dict[str, Any] = {}
-        for k, v in m.items():
-            if isinstance(v, jax.Array) and v.ndim == 0:
-                out[k] = float(v)
-            elif isinstance(v, jax.Array):
-                out[k] = [float(x) for x in v]
-            else:
-                out[k] = v
-        return out
+        return {k: scalarize(v) for k, v in m.items()}
 
     # ------------------------------------------------------------------
     def export_params(self) -> Dict[str, Any]:

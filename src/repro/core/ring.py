@@ -44,7 +44,8 @@ class RingTrainer:
     """
 
     def __init__(self, cfg: ModelConfig, tc: TrainConfig, mesh: Mesh,
-                 params: Dict[str, Any], n_stages: int, n_micro: int):
+                 params: Dict[str, Any], n_stages: int, n_micro: int, *,
+                 schedule=None):
         assert len(cfg.pattern) == 1, "ring trainer needs a uniform pattern"
         self.cfg, self.tc, self.mesh = cfg, tc, mesh
         self.S, self.M = n_stages, n_micro
@@ -54,7 +55,10 @@ class RingTrainer:
                              if k not in ("blocks",)}
         self.m_ad, self.v_ad = adamw.init_moments(self.stage_blocks["adapter"])
         self.m_hd, self.v_hd = adamw.init_moments(self.shared["head"])
-        self.sched = UnfreezeSchedule.from_train_config(tc)
+        # ``schedule`` may be any object with depth_at(step, n_blocks) -> int
+        # (e.g. a repro.api UnfreezePolicy); defaults to the paper's k-rule.
+        self.sched = (schedule if schedule is not None
+                      else UnfreezeSchedule.from_train_config(tc))
         self._round_fns: Dict[Tuple[int, int], Any] = {}
         self.step = 0
 

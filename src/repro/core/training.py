@@ -150,6 +150,19 @@ def make_qa_train_step(cfg: ModelConfig, tc: TrainConfig, boundary: int, *,
     return train_step
 
 
+def make_step(cfg: ModelConfig, tc: TrainConfig, boundary: int, *,
+              impl: str = "jnp"):
+    """Task-dispatching step builder: QA span head vs LM objective.
+
+    The single entry point the session API (``repro.api``) and the launch
+    driver share, so "which step fn does this config train with" is decided in
+    exactly one place.
+    """
+    if cfg.head_out == 2:
+        return make_qa_train_step(cfg, tc, boundary, impl=impl)
+    return make_train_step(cfg, tc, boundary, impl=impl)
+
+
 def make_eval_step(cfg: ModelConfig, *, impl: str = "jnp"):
     def eval_step(params, batch):
         logits, _ = tfm.forward(params, batch["tokens"], cfg,

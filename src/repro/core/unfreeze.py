@@ -18,6 +18,13 @@ frozen-trunk activation cache (``core/actcache.py``) keys entries by
 a boundary that could come back up would silently serve stale activations.
 Construction rejects non-monotone ``depths`` with a clear error, and the
 executor re-checks at runtime.
+
+``UnfreezeSchedule`` is the canonical "ScheduleLike": anything exposing
+``depth_at(step, n_blocks) -> int`` can drive the drivers (``core/ring.py``,
+``core/executor.py`` take a ``schedule=`` override) — ``repro.api.policies``
+builds its pluggable ``UnfreezePolicy`` implementations on exactly that
+surface, and ``repro.api.session.RingSession`` re-checks the monotone
+contract per step for every one of them.
 """
 from __future__ import annotations
 

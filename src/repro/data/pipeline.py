@@ -103,7 +103,9 @@ class RingBatcher:
         self.rng = np.random.default_rng(seed)
         self.slots_per_epoch = slots_per_epoch
         self._t = 0
-        self._slot_batches: List[Tuple[Array, Array]] = []
+        # keyed by slot (not an ordered list): the cursor may start mid-epoch,
+        # e.g. after a checkpoint restore, so slot 1 can be visited first
+        self._slot_batches: Dict[int, Tuple[Array, Array]] = {}
         if slots_per_epoch is not None:
             if slots_per_epoch < 1:
                 raise ValueError(f"slots_per_epoch must be >= 1, "
@@ -139,8 +141,8 @@ class RingBatcher:
                              "use next() or pass slots_per_epoch")
         slot = self._t % self.slots_per_epoch
         self._t += 1
-        if slot >= len(self._slot_batches):
-            self._slot_batches.append(self._stack(self._slot_idx[slot]))
+        if slot not in self._slot_batches:
+            self._slot_batches[slot] = self._stack(self._slot_idx[slot])
         toks, labs = self._slot_batches[slot]
         return slot, toks, labs
 

@@ -1,14 +1,22 @@
-"""Training driver: RingAda fine-tuning with scheduled layer unfreezing.
+"""Training driver: a thin CLI shell over ``repro.api.RingSession``.
 
-Two execution modes:
-  * ``--mode pjit`` (default): single- or multi-device data/tensor-parallel
-    training with the static unfreeze boundary (staged re-jit per depth change).
-  * ``--mode ring``: shard_map ring pipeline across ``--stages`` devices with
-    rotating initiators (needs >= stages local devices, e.g.
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``).  The default ring
-    driver is the fused ``RingExecutor`` (one donated executable per boundary,
-    no per-iteration host sync); ``--trainer reference`` selects the unfused
-    ``RingTrainer`` oracle.
+Every mode is a (backend, policy) pair on the one session facade:
+
+  * ``--mode pjit`` (default): staged-recompile data/tensor-parallel training
+    (``PjitBackend``); ``--scheme all_hot`` maps to the PipeAdapter-style
+    baseline policy (every adapter trainable from step 0).
+  * ``--mode ring``: shard_map ring pipeline across ``--stages`` devices
+    (needs >= stages local devices, e.g.
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``).
+    ``--trainer fused`` (default) is the donated single-executable
+    ``FusedBackend`` — with ``--slots-per-epoch`` it upgrades to the
+    ``CachedBackend`` (frozen-trunk Phase-A skip); ``--trainer reference``
+    is the unfused ``ReferenceBackend`` oracle.
+
+``--policy plateau`` swaps the paper's k-step rule for adaptive
+loss-plateau unfreezing in either mode.  ``--save``/``--resume`` round-trip
+the full session state (params + Adam moments + policy + data cursor) in
+BOTH modes via ``RingSession.save``/``restore``.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.train --arch mbert-squad --steps 120 \
@@ -21,179 +29,96 @@ import json
 import time
 from typing import Any, Dict, Optional
 
-import jax
-import jax.numpy as jnp
-
+from repro.api import (ExplicitPolicy, LoggingCallback, RingSession,
+                       resolve_policy)
 from repro.configs import TrainConfig, get_config
-from repro.core import training
-from repro.core.unfreeze import UnfreezeSchedule, boundary_schedule
-from repro.data.pipeline import Batcher, RingBatcher, make_client_datasets, merged
-from repro.models import params as prm
-from repro.optim import adamw
-from repro.checkpoint import checkpoint as ckpt
 
 
 def train_pjit(cfg, tc: TrainConfig, *, steps: int, log_every: int = 10,
                scheme: str = "ringada", impl: str = "jnp",
-               save_path: Optional[str] = None, log=print) -> Dict[str, Any]:
-    """Single-process training loop with the paper's unfreeze schedule.
+               save_path: Optional[str] = None, resume: Optional[str] = None,
+               policy: Any = None, log=print) -> Dict[str, Any]:
+    """Single-process training with the paper's unfreeze schedule — a shell
+    over ``RingSession`` with the pjit backend.
 
-    scheme: 'ringada' (scheduled unfreezing) | 'all_hot' (PipeAdapter/Single-style
-    baseline: every adapter trainable from step 0).
+    scheme: 'ringada' (scheduled unfreezing) | 'all_hot' (PipeAdapter/Single-
+    style baseline: every adapter trainable from step 0).
+
+    Note (vs the pre-session loop): the returned history now carries EVERY
+    step (host-synced in log_every batches, so async dispatch is unchanged),
+    not just the logged ones, and ``step`` counts from 1 (the value AFTER the
+    update) rather than 0.
     """
-    key = jax.random.key(tc.seed)
-    params = prm.materialize(prm.param_defs(cfg), key, cfg.dtype)
-    opt_state = adamw.init(training.full_trainable(params))
-    qa = cfg.head_out == 2
-    ds = merged(make_client_datasets(4, vocab=cfg.vocab_size,
-                                     n_per_client=256, seq=tc.seq_len,
-                                     seed=tc.seed, kind="qa" if qa else "lm"))
-    batcher = Batcher(ds, tc.batch_size, seed=tc.seed)
-
-    sched = UnfreezeSchedule.from_train_config(tc)
+    if scheme not in ("ringada", "all_hot"):
+        raise ValueError(f"scheme must be 'ringada' or 'all_hot', got {scheme!r}")
     if scheme == "all_hot":
-        segs = [(0, steps, 0)]
+        if policy not in (None, "interval"):
+            raise ValueError("scheme='all_hot' fixes the policy (every "
+                             "adapter hot from step 0) — drop --policy")
+        policy = ExplicitPolicy((cfg.n_layers,))
+    policy = resolve_policy(policy, tc)
+    if resume:
+        sess = RingSession.restore(resume, cfg, tc, backend="pjit",
+                                   policy=policy, impl=impl, log=log)
     else:
-        segs = boundary_schedule(cfg, sched, steps)
-
-    history = []
+        sess = RingSession.create(cfg, tc, backend="pjit", policy=policy,
+                                  impl=impl, log=log)
     t0 = time.time()
-    step_fns: Dict[int, Any] = {}
-    for (s0, s1, boundary) in segs:
-        if boundary not in step_fns:
-            mk = (training.make_qa_train_step if qa
-                  else training.make_train_step)
-            step_fns[boundary] = jax.jit(mk(cfg, tc, boundary, impl=impl),
-                                         donate_argnums=(0, 1))
-        fn = step_fns[boundary]
-        for step in range(s0, s1):
-            batch = batcher.next()
-            params, opt_state, metrics = fn(params, opt_state, batch)
-            if step % log_every == 0 or step == steps - 1:
-                m = {k: float(v) for k, v in metrics.items()}
-                m.update(step=step, boundary=boundary,
-                         depth=cfg.repeats - boundary,
-                         wall_s=round(time.time() - t0, 2))
-                history.append(m)
-                acc = m.get("accuracy", m.get("f1", 0.0))
-                log(f"step {step:5d} b={boundary:2d} "
-                    f"loss={m['loss']:.4f} acc/f1={acc:.3f} "
-                    f"({m['wall_s']}s)")
+    history = sess.run(steps, log_every=log_every,
+                       callbacks=[LoggingCallback(log, every=log_every)])
     if save_path:
-        ckpt.save(save_path, params, step=steps, adapters_only=True)
-    return {"history": history, "params": params, "opt_state": opt_state,
-            "wall_s": time.time() - t0}
+        sess.save(save_path)
+    st = sess.backend.state()
+    return {"history": history, "params": st["params"], "opt_state": st["opt"],
+            "session": sess, "wall_s": time.time() - t0}
 
 
 def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
                log_every: int = 1, trainer: str = "fused",
                slots_per_epoch: Optional[int] = None,
                cache_capacity: Optional[int] = None,
-               log=print) -> Dict[str, Any]:
-    """Ring-pipeline training across ``n_stages`` devices.
+               save_path: Optional[str] = None, resume: Optional[str] = None,
+               policy: Any = None, log=print) -> Dict[str, Any]:
+    """Ring-pipeline training across ``n_stages`` devices — a shell over
+    ``RingSession`` with the matching ring backend.
 
-    trainer='fused' (default): ``RingExecutor`` — the whole round (S
-    owner-iterations + optimizer) is one donated executable and metrics stay on
-    device between logging intervals (async dispatch: the host never blocks
-    mid-interval).  trainer='reference': the unfused ``RingTrainer`` oracle.
-
-    slots_per_epoch: epoch-stable batch slots (same slot => same examples every
-    epoch).  With the fused trainer this enables the frozen-trunk activation
-    cache: steady-state revisits of a (slot, boundary) key skip Phase A
-    entirely; a boundary drop invalidates the cache (core/actcache.py).  The
-    default ``None`` keeps the pre-cache behavior exactly: a fresh random draw
-    every round, cache off (it would never hit) — epoch-style training over a
-    fixed slot cycle is opt-in because it changes which data the model sees.
-    cache_capacity defaults to slots_per_epoch; 0 disables the cache while
-    keeping slotted batches.
+    trainer='fused' (default): the donated single-executable round; with
+    ``slots_per_epoch`` this becomes the cached backend (steady-state
+    revisits of a (slot, boundary) key skip Phase A entirely; a boundary drop
+    invalidates the cache).  trainer='reference': the unfused oracle.
+    ``cache_capacity`` defaults to ``slots_per_epoch``; 0 disables the cache
+    while keeping slotted batches.
     """
-    from repro import compat
-    from repro.core.executor import RingExecutor
-    from repro.core.ring import RingTrainer
-    from repro.launch.mesh import make_ring_mesh, require_devices
-
     if trainer not in ("fused", "reference"):
         raise ValueError(f"trainer must be 'fused' or 'reference', "
                          f"got {trainer!r}")
-    require_devices(n_stages)
-    if cfg.head_out is not None:
-        raise ValueError(
-            f"ring mode trains with the LM objective, but this config has a "
-            f"task head (head_out={cfg.head_out}) — the loss would be "
-            f"garbage/NaN. Use an LM config, or reduce with head_out=None "
-            f"like examples/ring_finetune.py.")
-    if cfg.repeats % n_stages != 0:
-        raise ValueError(
-            f"ring training needs repeats divisible by stages: "
-            f"cfg.repeats={cfg.repeats}, --stages {n_stages}. Pick --stages "
-            f"from the divisors of {cfg.repeats}, or a config/--reduced "
-            f"variant with more repeats.")
-    mesh = make_ring_mesh(n_stages)
-    key = jax.random.key(tc.seed)
-    params = prm.materialize(prm.param_defs(cfg), key, cfg.dtype)
-    if trainer == "fused":
-        cap = cache_capacity if cache_capacity is not None else (slots_per_epoch or 0)
-        if not slots_per_epoch:
-            cap = 0          # no stable slots => keys never repeat => no cache
-        elif 0 < cap < slots_per_epoch:
-            # round-robin slots + LRU: every slot is evicted before its
-            # revisit, so every round pays capture overhead for 0% hits
-            log(f"WARNING: cache_capacity {cap} < slots_per_epoch "
-                f"{slots_per_epoch}: the cache will thrash (0% hits, "
-                f"capture overhead every round) — raise the capacity or "
-                f"disable the cache (cache_capacity=0)")
-        drv = RingExecutor(cfg, tc, mesh, params, n_stages, tc.n_microbatches,
-                           cache_capacity=cap)
+    if trainer == "reference":
+        backend = "reference"
     else:
-        drv = RingTrainer(cfg, tc, mesh, params, n_stages, tc.n_microbatches)
-    clients = make_client_datasets(n_stages, vocab=cfg.vocab_size,
-                                   n_per_client=128, seq=tc.seq_len,
-                                   seed=tc.seed)
-    rb = RingBatcher(clients, tc.n_microbatches, tc.batch_size, seed=tc.seed,
-                     slots_per_epoch=slots_per_epoch)
-
-    history = []
-    pending = []          # fused path: device-array metrics awaiting host sync
+        cap = (cache_capacity if cache_capacity is not None
+               else (slots_per_epoch or 0))
+        backend = "cached" if (slots_per_epoch and cap) else "fused"
+    if resume:
+        # the checkpoint records backend/stages/slots/capacity; re-deriving
+        # them from (possibly omitted) CLI flags would silently resume a
+        # slotted cached run as fused+streaming — a different data sequence.
+        sess = RingSession.restore(resume, cfg, tc, policy=policy, log=log)
+        if sess.backend.kind != "ring":
+            raise ValueError(
+                f"--resume checkpoint was saved by the "
+                f"{sess.backend.name!r} backend; resume it with --mode pjit")
+    else:
+        sess = RingSession.create(cfg, tc, backend=backend, policy=policy,
+                                  n_stages=n_stages,
+                                  slots_per_epoch=slots_per_epoch,
+                                  cache_capacity=cache_capacity, log=log)
     t0 = time.time()
-
-    def flush():
-        for m in pending:
-            m2 = RingExecutor.materialize_metrics(m)
-            m2["wall_s"] = round(time.time() - t0, 2)
-            history.append(m2)
-        pending.clear()
-
-    def cache_note(h):
-        if "cache_hit_rate" not in h:
-            return ""
-        return (f" cache[hit={h['cache_hit_rate']:.0%} "
-                f"inval={h['cache_invalidations']}]")
-
-    with compat.set_mesh(mesh):
-        for r in range(rounds):
-            if slots_per_epoch:
-                slot, tokens, labels = rb.next_slot()
-            else:
-                slot, (tokens, labels) = None, rb.next()
-            if trainer == "fused":
-                m = drv.round(tokens, labels, slot=slot)
-                pending.append(m)
-                if r % log_every == 0 or r == rounds - 1:
-                    flush()                  # one host sync per interval
-                    h = history[-1]
-                    log(f"round {r:4d} loss={h['loss']:.4f} "
-                        f"boundary={h['boundary']}{cache_note(h)} "
-                        f"({h['wall_s']}s)")
-            else:
-                m = drv.round(tokens, labels)
-                m["wall_s"] = round(time.time() - t0, 2)
-                history.append(m)
-                if r % log_every == 0:
-                    log(f"round {r:4d} loss={m['loss']:.4f} "
-                        f"boundary={m['boundary']} ({m['wall_s']}s)")
-        flush()
-    return {"history": history, "trainer": drv,
-            "wall_s": time.time() - t0}
+    history = sess.run(rounds, log_every=log_every,
+                       callbacks=[LoggingCallback(log, every=log_every)])
+    if save_path:
+        sess.save(save_path)
+    return {"history": history, "trainer": sess.backend.driver,
+            "session": sess, "wall_s": time.time() - t0}
 
 
 def main() -> None:
@@ -202,9 +127,13 @@ def main() -> None:
     ap.add_argument("--mode", choices=["pjit", "ring"], default="pjit")
     ap.add_argument("--scheme", choices=["ringada", "all_hot"],
                     default="ringada")
+    ap.add_argument("--policy", choices=["interval", "plateau"],
+                    default="interval",
+                    help="unfreeze policy: the paper's k-step rule, or "
+                         "adaptive loss-plateau unfreezing")
     ap.add_argument("--trainer", choices=["fused", "reference"],
                     default="fused",
-                    help="ring driver: fused RingExecutor or the unfused "
+                    help="ring backend: fused RingExecutor or the unfused "
                          "RingTrainer oracle")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--rounds", type=int, default=25)
@@ -213,6 +142,8 @@ def main() -> None:
                     help="train the reduced (CPU-sized) variant")
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=8,
+                    help="ring mode: microbatches in flight per round")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--unfreeze-interval", type=int, default=40)
     ap.add_argument("--slots-per-epoch", type=int, default=0,
@@ -226,7 +157,14 @@ def main() -> None:
     ap.add_argument("--no-cache", action="store_true",
                     help="ring mode: disable the frozen-trunk activation "
                          "cache (use for streaming/non-repeating data)")
-    ap.add_argument("--save", default=None)
+    ap.add_argument("--save", default=None,
+                    help="checkpoint path (both modes): params + Adam "
+                         "moments + policy + data cursor")
+    ap.add_argument("--resume", default=None,
+                    help="resume bit-reproducibly from a --save checkpoint "
+                         "(ring mode restores the SAVED backend/stages/"
+                         "slots/cache configuration; the corresponding "
+                         "flags are ignored)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -234,16 +172,19 @@ def main() -> None:
         cfg = cfg.reduced()
     tc = TrainConfig(batch_size=args.batch_size, seq_len=args.seq_len,
                      learning_rate=args.lr, steps=args.steps,
-                     unfreeze_interval=args.unfreeze_interval)
+                     unfreeze_interval=args.unfreeze_interval,
+                     n_microbatches=args.microbatches)
     if args.mode == "pjit":
         out = train_pjit(cfg, tc, steps=args.steps, scheme=args.scheme,
-                         save_path=args.save)
+                         policy=args.policy, save_path=args.save,
+                         resume=args.resume)
     else:
         out = train_ring(cfg, tc, rounds=args.rounds, n_stages=args.stages,
-                         trainer=args.trainer,
+                         trainer=args.trainer, policy=args.policy,
                          slots_per_epoch=args.slots_per_epoch or None,
                          cache_capacity=0 if args.no_cache
-                         else args.cache_capacity)
+                         else args.cache_capacity,
+                         save_path=args.save, resume=args.resume)
     print(json.dumps(out["history"][-1], default=float))
 
 

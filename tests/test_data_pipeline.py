@@ -69,6 +69,21 @@ def test_slot_shapes_and_cycling():
     assert slots == [0, 1, 0, 1, 0]
 
 
+def test_mid_epoch_cursor_start_materializes_correct_slots():
+    """A restored session's batcher starts mid-epoch (cursor _t > 0), so the
+    first slot visited may not be 0 — lazy slot materialization must key by
+    slot, not by visit order (regression: IndexError + wrong-slot batches)."""
+    fresh = _mk(slots=3)
+    resumed = _mk(slots=3)
+    resumed._t = 2                       # what RingDataSource.load_state does
+    want = [fresh.next_slot() for _ in range(5)][2:]
+    got = [resumed.next_slot() for _ in range(3)]
+    for (s0, t0, l0), (s1, t1, l1) in zip(want, got):
+        assert s0 == s1
+        np.testing.assert_array_equal(np.asarray(t0), np.asarray(t1))
+        np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+
+
 def test_next_slot_requires_slots_per_epoch():
     ds = make_client_datasets(2, vocab=64, n_per_client=16, seq=8, seed=0)
     rb = RingBatcher(ds, 2, 2, seed=0)
