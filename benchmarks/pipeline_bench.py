@@ -1,24 +1,30 @@
 """Ring-pipeline benchmark.
 
-Three sections:
-  1. analytic tick counts per unfreeze depth (incl. the cached Phase-A skip),
+Four sections:
+  1. analytic tick counts per unfreeze depth (incl. the cached Phase-A skip
+     and the packed conveyor's per-round totals), cross-checked against the
+     discrete-event simulator (``ringada_packed`` with ``n_owners=S``),
   2. simulated round time + utilization (discrete-event MPMD model),
   3. **fused-vs-reference-vs-cached**: real wall-clock steps/sec, executable
      counts and per-executable memory (incl. donation aliasing) for the fused
-     ``RingExecutor`` against the unfused ``RingTrainer``, plus the
-     frozen-trunk activation cache's steady state (Phase A skipped) at the
-     highest scheduled boundary, on a 4-(host-)device ring — and the
-     ``repro.api.RingSession`` facade over the same cached path (the
-     facade-overhead ratio guards against the API growing a hot-loop cost).
+     ``RingExecutor`` against the unfused ``RingTrainer``, plus
+       * packed-conveyor Phase A vs the per-owner scan (direct rounds at the
+         steady boundary — the first-visit/capture cost the conveyor cuts),
+       * the frozen-trunk activation cache's steady state per storage dtype
+         (f32 / bf16 / int8: bytes per entry, hit rate, loss drift),
+       * the ``repro.api.RingSession`` facade over the cached path.
      Runs in a subprocess so the parent process keeps its 1-device backend;
-     invoke
-     directly with ``python benchmarks/pipeline_bench.py`` or through
-     ``benchmarks/run.py``.
+     device count comes from ``--devices`` (CI runs 2 and 4).
+  4. per-mode executable memory: peak live bytes for packed / scan / cached.
 
-Emits ``BENCH_ring.json`` (machine-readable; ``--out`` overrides the path) so
-the steady-state perf trajectory — reference vs PR-1 fused vs cached, cache
-hit rate, per-boundary compile counts — is tracked across PRs.  CI uploads it
-as a workflow artifact.
+Emits ``BENCH_ring.json`` (schema ``BENCH_ring/v2``; ``--out`` overrides the
+path) so the perf trajectory — reference vs fused vs cached, packed-vs-scan
+round ratio, cache bytes/entry + hit rate per dtype, compile counts — is
+tracked across PRs.  CI uploads it from both a 2- and a 4-device CPU mesh and
+gates on ``--check``: cached speedup >= ``CACHED_SPEEDUP_FLOOR`` (1.15 — see
+``check_bench_ring``'s threshold note), packed strictly faster than the scan
+wherever F >= 2, and bf16 entries matching the f32 hit rate at half the
+bytes.
 """
 from __future__ import annotations
 
@@ -33,7 +39,8 @@ DEFAULT_OUT = os.path.join(ROOT, "BENCH_ring.json")
 
 _FUSED_SCRIPT = r"""
 import os, time, json
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+S = int(os.environ.get("BENCH_RING_DEVICES", "4"))
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={S}"
 os.environ["JAX_PLATFORMS"] = "cpu"
 import jax, jax.numpy as jnp
 from repro import compat
@@ -45,7 +52,7 @@ from repro.models import params as prm
 # Edge-device regime: tiny per-client microbatches over small adapters — the
 # setting where RingAda claims its win and where dispatch / host-sync /
 # staged-recompile overheads dominate.
-S, M, mb, seq = 4, 4, 1, 32
+M, mb, seq = 4, 1, 32
 cfg = get_config("stablelm-3b").reduced(n_layers=4, repeats=4,
                                         d_model=128, d_ff=256)
 mesh = compat.make_mesh((S,), ("stage",))
@@ -61,7 +68,22 @@ def sync(last):
     if hasattr(last["loss"], "block_until_ready"):
         last["loss"].block_until_ready()             # fused: one final sync
 
-out = {}
+def time_rounds(step, rounds, reps=3):
+    # Best-of-reps wall time for `rounds` back-to-back rounds (seconds).
+    # Host-CPU collectives jitter by 50%+ run-to-run; a single timing window
+    # is too noisy to gate CI on, the min of a few windows is stable.
+    best = None
+    for _ in range(reps):
+        t0 = time.time()
+        last = None
+        for r in range(rounds):
+            last = step(r)
+        sync(last)
+        dt = time.time() - t0
+        best = dt if best is None else min(best, dt)
+    return best
+
+out = {"mesh_devices": S}
 with compat.set_mesh(mesh):
     # 1. end-to-end: the paper's schedule walks every boundary; each bump
     #    recompiles S executables on the reference path, 1 on the fused path.
@@ -82,21 +104,27 @@ with compat.set_mesh(mesh):
             "n_executables": drv.n_executables,
         }
 
-    # 2. steady state: fixed boundary, compile excluded.
+    # 2. steady state: fixed boundary, compile excluded.  'fused' is the
+    #    packed conveyor (the default); 'fused_scan' the per-owner Phase A —
+    #    their direct-round ratio is the conveyor's win on every
+    #    first-visit/capture round (saves (S-1)(F-1) of S(M+F-1) ticks).
     ROUNDS = 16
     tc_fix = TrainConfig(learning_rate=1e-3, unfreeze_interval=10**6,
                          n_microbatches=M, batch_size=mb, seq_len=seq)
-    for name, cls in (("reference", RingTrainer), ("fused", RingExecutor)):
-        drv = cls(cfg, tc_fix, mesh, fresh_params(), S, M)
+    drivers = {}
+    for name, mk in (
+            ("reference", lambda: RingTrainer(cfg, tc_fix, mesh,
+                                              fresh_params(), S, M)),
+            ("fused", lambda: RingExecutor(cfg, tc_fix, mesh, fresh_params(),
+                                           S, M, packed=True)),
+            ("fused_scan", lambda: RingExecutor(cfg, tc_fix, mesh,
+                                                fresh_params(), S, M,
+                                                packed=False))):
+        drv = mk()
         t0 = time.time()
         drv.round(tokens, labels)                    # warmup: compile
         compile_s = time.time() - t0
-        t0 = time.time()
-        last = None
-        for _ in range(ROUNDS):
-            last = drv.round(tokens, labels)
-        sync(last)
-        dt = time.time() - t0
+        dt = time_rounds(lambda r: drv.round(tokens, labels), ROUNDS)
         rec = {"steps_per_sec": S * ROUNDS / dt, "compile_s": compile_s,
                "round_ms": 1e3 * dt / ROUNDS,
                "n_executables": drv.n_executables}
@@ -104,35 +132,53 @@ with compat.set_mesh(mesh):
         if "peak_bytes_in_use" in stats:
             rec["device_peak_bytes"] = stats["peak_bytes_in_use"]
         out.setdefault("steady", {})[name] = rec
+        drivers[name] = drv
+    out["steady_boundary"] = drivers["fused"].boundary_at(0)
+    out["frozen_stages"] = (out["steady_boundary"]
+                            // drivers["fused"].lps)
+    out["n_micro"] = M
+    out["lps"] = drivers["fused"].lps
+    out["packed_scan_ratio"] = (out["steady"]["fused"]["round_ms"]
+                                / out["steady"]["fused_scan"]["round_ms"])
 
-    # 3. actcache steady state at the highest scheduled boundary (F = S-1):
-    #    epoch 0 captures each slot's boundary activations, every later epoch
-    #    enters the pipeline at stage F (no embed / all_gather / Phase A).
+    # 3. actcache steady state at the highest scheduled boundary (F = S-1),
+    #    per storage dtype: epoch 0 captures each slot's boundary
+    #    activations, every later epoch enters the pipeline at stage F (no
+    #    embed / all_gather / Phase A), dequantizing on device.  The f32 run
+    #    doubles as the headline 'cached' record.
     N_SLOTS = 2
-    drv = RingExecutor(cfg, tc_fix, mesh, fresh_params(), S, M,
-                       cache_capacity=N_SLOTS)
-    t0 = time.time()
-    for sl in range(N_SLOTS):
-        drv.round(tokens, labels, slot=sl)       # capture epoch (+compile)
-    last = drv.round(tokens, labels, slot=0)     # first hit: compile cached
-    sync(last)
-    compile_s = time.time() - t0
-    t0 = time.time()
-    for r in range(ROUNDS):
-        last = drv.round(tokens, labels, slot=r % N_SLOTS)
-    sync(last)
-    dt = time.time() - t0
-    stats = drv.cache.stats()
-    out["steady"]["cached"] = {
-        "steps_per_sec": S * ROUNDS / dt, "compile_s": compile_s,
-        "round_ms": 1e3 * dt / ROUNDS,
-        "n_executables": drv.n_executables,
-        "boundary": drv.boundary_at(0),
-        "cache_hit_rate": stats["cache_hit_rate"],
-        "cache_hits": stats["cache_hits"],
-        "cache_misses": stats["cache_misses"],
-        "compile_counts": drv.compile_counts(),
-    }
+    for dt_name in ("f32", "bf16", "int8"):
+        drv = RingExecutor(cfg, tc_fix, mesh, fresh_params(), S, M,
+                           cache_capacity=N_SLOTS, cache_dtype=dt_name)
+        t0 = time.time()
+        for sl in range(N_SLOTS):
+            drv.round(tokens, labels, slot=sl)   # capture epoch (+compile)
+        last = drv.round(tokens, labels, slot=0)     # first hit: compile cached
+        sync(last)
+        compile_s = time.time() - t0
+        dt = time_rounds(
+            lambda r: drv.round(tokens, labels, slot=r % N_SLOTS), ROUNDS)
+        last = drv.round(tokens, labels, slot=0)
+        stats = drv.cache.stats()
+        rec = {
+            "steps_per_sec": S * ROUNDS / dt, "compile_s": compile_s,
+            "round_ms": 1e3 * dt / ROUNDS,
+            "n_executables": drv.n_executables,
+            "boundary": drv.boundary_at(0),
+            "final_loss": float(last["loss"]),
+            "cache_hit_rate": stats["cache_hit_rate"],
+            "cache_hits": stats["cache_hits"],
+            "cache_misses": stats["cache_misses"],
+            "bytes_per_entry": stats["cache_bytes_per_entry"],
+            "buffer_bytes": stats["cache_buffer_bytes"],
+            "compile_counts": drv.compile_counts(),
+        }
+        out.setdefault("cache_dtypes", {})[dt_name] = rec
+        if dt_name == "f32":
+            out["steady"]["cached"] = rec
+    for dt_name, rec in out["cache_dtypes"].items():
+        rec["loss_drift_vs_f32"] = abs(
+            rec["final_loss"] - out["cache_dtypes"]["f32"]["final_loss"])
 
     # 4. the RingSession facade over the same cached path: the API adds only
     #    thin host-side dispatch over the same executables, so its steady
@@ -153,9 +199,10 @@ with compat.set_mesh(mesh):
         "cache_hit_rate": cap.result().get("cache_hit_rate", 0.0),
     }
 
-    # per-executable memory analysis: the fused step aliases (donates) params +
-    # moments; the reference path re-materializes grads/outputs per dispatch
-    # and runs its optimizer un-donated on the host.
+    # per-executable memory analysis: the fused step aliases (donates) params
+    # + moments; packed holds the whole [S*M] conveyor live (temp bytes) where
+    # the scan holds one owner's [M]; the cached executable takes the ring
+    # buffer instead of tokens.
     def mem_record(ma):
         return {
             "argument_bytes": ma.argument_size_in_bytes,
@@ -168,15 +215,20 @@ with compat.set_mesh(mesh):
 
     abstract = lambda t: jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
-    ex = RingExecutor(cfg, tc_fix, mesh, fresh_params(), S, M, donate=True)
-    b = ex.boundary_at(0)
-    ma = ex._fn(b).lower(
-        abstract(ex.stage_blocks), abstract(ex.shared),
-        abstract(ex.opt_state), abstract(tokens),
-        abstract(labels)).compile().memory_analysis()
-    if ma is not None:
-        out["fused_memory"] = mem_record(ma)
-    ref = RingTrainer(cfg, tc_fix, mesh, fresh_params(), S, M)
+    for name in ("fused", "fused_scan"):
+        ex = drivers[name]
+        b = ex.boundary_at(0)
+        ma = ex._fn(b).lower(
+            abstract(ex.stage_blocks), abstract(ex.shared),
+            abstract(ex.opt_state), abstract(tokens),
+            abstract(labels)).compile().memory_analysis()
+        if ma is not None:
+            key = "packed" if name == "fused" else "scan"
+            out.setdefault("mode_memory", {})[key] = mem_record(ma)
+            if name == "fused":
+                out["fused_memory"] = mem_record(ma)
+    ref = drivers["reference"]
+    b = drivers["fused"].boundary_at(0)
     ma_ref = ref._fn(0, b).lower(
         abstract(ref.stage_blocks), abstract(ref.shared),
         abstract(tokens), abstract(labels)).compile().memory_analysis()
@@ -195,13 +247,14 @@ print(json.dumps(out))
 """
 
 
-def bench_fused_vs_reference(log=print) -> Dict:
-    """Run the fused-vs-reference comparison in a 4-device subprocess."""
-    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+def bench_fused_vs_reference(log=print, devices: int = 4) -> Dict:
+    """Run the fused-vs-reference comparison in an n-device subprocess."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"),
+               BENCH_RING_DEVICES=str(devices))
     env.pop("XLA_FLAGS", None)
     try:
         res = subprocess.run([sys.executable, "-c", _FUSED_SCRIPT], env=env,
-                             capture_output=True, text=True, timeout=900)
+                             capture_output=True, text=True, timeout=1800)
     except subprocess.TimeoutExpired:
         return {"skipped": "timeout"}
     if res.returncode != 0:
@@ -209,16 +262,24 @@ def bench_fused_vs_reference(log=print) -> Dict:
     out = json.loads(res.stdout.strip().splitlines()[-1])
     for name in ("reference", "fused"):
         r = out["schedule"][name]
-        log(f"  schedule {name:9s}: {r['steps_per_sec']:6.2f} steps/s "
+        log(f"  schedule {name:10s}: {r['steps_per_sec']:6.2f} steps/s "
             f"end-to-end ({r['wall_s']:.1f}s, {r['n_executables']} "
             f"executables over all boundaries)")
-    for name in ("reference", "fused", "cached"):
+    for name in ("reference", "fused", "fused_scan", "cached"):
         r = out["steady"][name]
-        log(f"  steady   {name:9s}: {r['steps_per_sec']:6.2f} steps/s "
+        log(f"  steady   {name:10s}: {r['steps_per_sec']:6.2f} steps/s "
             f"({r['round_ms']:.0f} ms/round, compile {r['compile_s']:.1f}s, "
             f"{r['n_executables']} executable(s))")
+    log(f"  packed conveyor: {out['packed_scan_ratio']:.2f}x the scan's "
+        f"round time at F={out['frozen_stages']} "
+        f"(first-visit/capture rounds)")
+    for dt_name, r in out.get("cache_dtypes", {}).items():
+        log(f"  cache[{dt_name:5s}]: {r['bytes_per_entry']:>8d} B/entry, "
+            f"hit rate {r['cache_hit_rate']:.0%}, "
+            f"{r['round_ms']:.0f} ms/round, "
+            f"loss drift vs f32 {r['loss_drift_vs_f32']:.2e}")
     r = out["steady"]["session_cached"]
-    log(f"  steady   session  : {r['steps_per_sec']:6.2f} steps/s "
+    log(f"  steady   session   : {r['steps_per_sec']:6.2f} steps/s "
         f"({r['round_ms']:.0f} ms/round) — RingSession facade at "
         f"{out['session_facade_ratio']:.2f}x the raw cached driver")
     for key in ("fused_memory", "reference_memory"):
@@ -227,6 +288,9 @@ def bench_fused_vs_reference(log=print) -> Dict:
             log(f"  {key.split('_')[0]:9s} executable: "
                 f"peak={fm['peak_bytes'] / 2**20:.1f} MiB "
                 f"(donation aliases {fm['alias_bytes'] / 2**20:.1f} MiB)")
+    for key, fm in out.get("mode_memory", {}).items():
+        log(f"  mode {key:6s} executable: peak={fm['peak_bytes'] / 2**20:.1f} "
+            f"MiB (temps {fm['temp_bytes'] / 2**20:.1f} MiB)")
     c = out["steady"]["cached"]
     log(f"  actcache: hit rate {c['cache_hit_rate']:.0%} at boundary "
         f"{c['boundary']}, compiles {c['compile_counts']}")
@@ -236,12 +300,43 @@ def bench_fused_vs_reference(log=print) -> Dict:
     return out
 
 
-def write_bench_ring(out: Dict, path: str, log=print) -> Optional[Dict]:
-    """Condense the fused-vs-reference-vs-cached section into BENCH_ring.json.
+def _tick_ledger(S: int, M: int, frozen: int) -> Dict[str, float]:
+    """Phase-A tick closed forms + discrete-event cross-check for the
+    measured bench geometry (S stages, M microbatches, F frozen stages)."""
+    from repro.core.partition import DeviceProfile
+    from repro.core.pipeline import pipeline_tick_counts
+    from repro.core.simulator import LayerProfile, SimConfig, simulate_round
 
-    Machine-readable perf trajectory (tracked across PRs, uploaded by CI):
-    steady-state steps/sec for reference / PR-1 fused / cached, the cache hit
-    rate, and per-boundary compile counts.
+    t_scan = pipeline_tick_counts(S, M, boundary=frozen, lps=1)
+    t_packed = pipeline_tick_counts(S, M, boundary=frozen, lps=1, packed=True)
+    row: Dict[str, float] = {
+        "phase_a_round_ticks_scan": t_scan["phase_a_round_ticks"],
+        "phase_a_round_ticks_packed": t_packed["phase_a_round_ticks"],
+        "phase_a_saved_ticks": t_packed["phase_a_saved_ticks"],
+    }
+    if 0 < frozen < S:
+        fz = LayerProfile(1.0, 0.0, 1.0, 1.0, 0.1, 0.0)
+        hot = LayerProfile(0.0, 0.0, 1.0, 1.0, 0.1, 0.0)
+        lay = [fz] * frozen + [hot] * (S - frozen)
+        dev = [DeviceProfile(1.0, 4096)] * S
+        sim = SimConfig(n_layers=S, n_devices=S, n_microbatches=M)
+        row["sim_round_scan"] = simulate_round(
+            "ringada", sim, lay, dev, unfreeze_depth=S - frozen,
+            n_owners=S).time_per_round_s
+        row["sim_round_packed"] = simulate_round(
+            "ringada_packed", sim, lay, dev, unfreeze_depth=S - frozen,
+            n_owners=S).time_per_round_s
+    return row
+
+
+def write_bench_ring(out: Dict, path: str, log=print) -> Optional[Dict]:
+    """Condense the measured section into BENCH_ring.json (schema v2).
+
+    Machine-readable perf trajectory (tracked across PRs, uploaded by CI
+    from both the 2- and 4-device meshes): steady-state steps/sec for
+    reference / fused(packed) / scan / cached, the packed-vs-scan round
+    ratio with its tick-count ledger, per-dtype cache bytes/entry + hit
+    rate, per-mode executable peak bytes, and per-boundary compile counts.
     """
     fvr = out.get("fused_vs_reference", {})
     if "steady" not in fvr:
@@ -250,16 +345,39 @@ def write_bench_ring(out: Dict, path: str, log=print) -> Optional[Dict]:
         return None
     steady = fvr["steady"]
     cached = steady["cached"]
+    frozen = fvr.get("frozen_stages", 0)
+    # tick ledger for the MEASURED geometry (the section-1 table uses the
+    # simulator's 12-block model — different M/lps; publishing those numbers
+    # next to packed_scan_ratio would compare two configurations)
+    tick_row = _tick_ledger(fvr.get("mesh_devices", 4),
+                            fvr.get("n_micro", 4), frozen)
     bench = {
-        "schema": "BENCH_ring/v1",
-        "mesh_devices": 4,
+        "schema": "BENCH_ring/v2",
+        "mesh_devices": fvr.get("mesh_devices", 4),
         "boundary": cached["boundary"],
+        "frozen_stages": frozen,
         "steady_steps_per_sec": {
             name: steady[name]["steps_per_sec"]
-            for name in ("reference", "fused", "cached")},
+            for name in ("reference", "fused", "fused_scan", "cached")},
         "steady_round_ms": {
             name: steady[name]["round_ms"]
-            for name in ("reference", "fused", "cached")},
+            for name in ("reference", "fused", "fused_scan", "cached")},
+        "packed_scan_ratio": fvr.get("packed_scan_ratio"),
+        "phase_a_ticks": {
+            "packed": tick_row.get("phase_a_round_ticks_packed"),
+            "scan": tick_row.get("phase_a_round_ticks_scan"),
+            "saved": tick_row.get("phase_a_saved_ticks"),
+            "simulated_packed": tick_row.get("sim_round_packed"),
+            "simulated_scan": tick_row.get("sim_round_scan"),
+        },
+        "cache_dtypes": {
+            name: {k: r.get(k) for k in
+                   ("bytes_per_entry", "buffer_bytes", "cache_hit_rate",
+                    "round_ms", "steps_per_sec", "loss_drift_vs_f32")}
+            for name, r in fvr.get("cache_dtypes", {}).items()},
+        "mode_memory_peak_bytes": {
+            k: v.get("peak_bytes")
+            for k, v in fvr.get("mode_memory", {}).items()},
         "speedup_fused_vs_reference": fvr["steady_speedup"],
         "speedup_cached_vs_fused": fvr["cached_speedup_vs_fused"],
         "speedup_schedule_fused_vs_reference": fvr["speedup"],
@@ -277,13 +395,69 @@ def write_bench_ring(out: Dict, path: str, log=print) -> Optional[Dict]:
         f.write("\n")
     log(f"  wrote {path}: cached {bench['steady_steps_per_sec']['cached']:.2f} "
         f"steps/s = {bench['speedup_cached_vs_fused']:.2f}x fused "
-        f"({bench['cache_hit_rate']:.0%} hit rate)")
+        f"({bench['cache_hit_rate']:.0%} hit rate), packed/scan "
+        f"{bench['packed_scan_ratio']:.2f}")
     return bench
 
 
-def run(log=print, out_path: str = DEFAULT_OUT) -> Dict:
+CACHED_SPEEDUP_FLOOR = 1.15
+
+
+def check_bench_ring(path: str, log=print) -> bool:
+    """The CI regression gate over a written BENCH_ring.json.
+
+    Fails when the cached steady state stops clearly beating the fused
+    executor, when the packed conveyor stops beating the per-owner scan on
+    first-visit/capture rounds (only meaningful at F >= 2 — at F <= 1 there
+    are no cross-owner bubbles to save, so the ratio gate is skipped), or
+    when bf16 entries stop matching the f32 hit rate at half the bytes.
+
+    Threshold note: the v1 bench's headline "cached = 3x fused" came from
+    single timing windows, which on host-CPU collectives jitter by 50%+ and
+    systematically flattered the second-measured driver; under the v2
+    best-of-3 methodology the honest steady-state ratio at (S=4, M=4, F=3)
+    is ~1.3x — structurally capped near 1.6x, since the cached round still
+    pays all of Phase B's forward AND backward ticks and the round-fixed
+    optimizer/dispatch cost.  The floor is set below the measured ratio with
+    margin; the packed gate (a same-executable A/B) is the tight one.
+    """
+    with open(path) as f:
+        bench = json.load(f)
+    ok = True
+
+    def gate(cond, msg):
+        nonlocal ok
+        log(f"  [{'PASS' if cond else 'FAIL'}] {msg}")
+        ok = ok and cond
+
+    sp = bench.get("speedup_cached_vs_fused") or 0.0
+    gate(sp >= CACHED_SPEEDUP_FLOOR,
+         f"speedup_cached_vs_fused {sp:.2f} >= {CACHED_SPEEDUP_FLOOR}")
+    frozen = bench.get("frozen_stages", 0)
+    ratio = bench.get("packed_scan_ratio")
+    if frozen >= 2 and ratio is not None:
+        gate(ratio < 1.0,
+             f"packed/scan round-ms ratio {ratio:.3f} < 1.0 at F={frozen}")
+    else:
+        log(f"  [skip] packed/scan ratio gate (F={frozen} < 2: no "
+            f"cross-owner bubbles to pack away)")
+    dts = bench.get("cache_dtypes", {})
+    if "f32" in dts and "bf16" in dts:
+        f32d, bf = dts["f32"], dts["bf16"]
+        gate(bf["bytes_per_entry"] * 2 == f32d["bytes_per_entry"],
+             f"bf16 entry bytes {bf['bytes_per_entry']} == half of f32's "
+             f"{f32d['bytes_per_entry']}")
+        gate(bf["cache_hit_rate"] == f32d["cache_hit_rate"],
+             f"bf16 hit rate {bf['cache_hit_rate']:.0%} == f32's at half "
+             f"the bytes")
+        drift = bf.get("loss_drift_vs_f32", 1.0)
+        gate(drift < 1e-3, f"bf16 loss drift vs f32 {drift:.2e} < 1e-3")
+    return ok
+
+
+def run(log=print, out_path: str = DEFAULT_OUT, devices: int = 4) -> Dict:
     out = {}
-    S, M, lps = 4, 8, 3           # 12 blocks over 4 stages
+    S, M, lps = devices, 8, 12 // devices      # 12 blocks over the mesh
     from repro.core.partition import DeviceProfile
     from repro.core.pipeline import pipeline_tick_counts
     from repro.core.simulator import LayerProfile, SimConfig, simulate_round
@@ -294,34 +468,45 @@ def run(log=print, out_path: str = DEFAULT_OUT) -> Dict:
         tc = pipeline_tick_counts(S, M, boundary=frozen_stages * lps, lps=lps,
                                   cached=True)
         t["fwd_ticks_cached"] = tc["fwd_ticks"]
+        t.pop("phase_a_round_ticks")
+        t.pop("phase_a_saved_ticks")
+        # closed forms + discrete-event cross-check (unit-cost frozen
+        # blocks, free hot blocks and links: engine time == tick count)
+        t.update(_tick_ledger(S, M, frozen_stages))
+        if 0 < frozen_stages < S:
+            assert t["sim_round_scan"] == t["phase_a_round_ticks_scan"]
+            assert t["sim_round_packed"] == t["phase_a_round_ticks_packed"]
         ticks[f"frozen_{frozen_stages}"] = t
         log(f"  frozen_stages={frozen_stages}: fwd={t['fwd_ticks']} "
-            f"(cached {tc['fwd_ticks']}) bwd={t['bwd_ticks']} ticks")
+            f"(cached {tc['fwd_ticks']}) bwd={t['bwd_ticks']} ticks; "
+            f"phase A/round scan={t['phase_a_round_ticks_scan']} "
+            f"packed={t['phase_a_round_ticks_packed']} "
+            f"(saves {t['phase_a_saved_ticks']})")
     out["tick_counts"] = ticks
 
     layers = [LayerProfile(0.01, 0.02, 20.0, 30.0, 0.6, 2.0)] * 12
-    devices = [DeviceProfile(1.0, 4096)] * 4
-    sim = SimConfig(n_layers=12, n_devices=4, n_microbatches=M)
+    sim_devices = [DeviceProfile(1.0, 4096)] * S
+    sim = SimConfig(n_layers=12, n_devices=S, n_microbatches=M)
     util = {}
     for depth in (1, 3, 6, 12):
-        r = simulate_round("ringada", sim, layers, devices,
+        r = simulate_round("ringada", sim, layers, sim_devices,
                            unfreeze_depth=depth)
-        rc = simulate_round("ringada_cached", sim, layers, devices,
+        rc = simulate_round("ringada_cached", sim, layers, sim_devices,
                             unfreeze_depth=depth)
         busy = sum(r.device_busy_s.values())
         util[f"depth_{depth}"] = {
             "round_s": r.time_per_round_s,
             "round_s_cached": rc.time_per_round_s,
-            "utilization": busy / (r.time_per_round_s * 4),
+            "utilization": busy / (r.time_per_round_s * S),
         }
         log(f"  depth={depth:2d}: round={r.time_per_round_s:.3f}s "
             f"(cached {rc.time_per_round_s:.3f}s) "
-            f"util={busy / (r.time_per_round_s * 4):.2%}")
+            f"util={busy / (r.time_per_round_s * S):.2%}")
     out["simulated_rounds"] = util
 
-    log("fused RingExecutor vs reference RingTrainer vs actcache "
-        "(4 host devices):")
-    out["fused_vs_reference"] = bench_fused_vs_reference(log)
+    log(f"fused RingExecutor vs reference RingTrainer vs packed vs actcache "
+        f"({devices} host devices):")
+    out["fused_vs_reference"] = bench_fused_vs_reference(log, devices)
     if out_path:
         out["bench_ring"] = write_bench_ring(out, out_path, log)
     return out
@@ -333,5 +518,14 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=DEFAULT_OUT,
                     help="where to write BENCH_ring.json ('' to skip)")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="virtual CPU devices for the measured section "
+                         "(CI runs 2 and 4)")
+    ap.add_argument("--check", default=None, metavar="BENCH_JSON",
+                    help="gate mode: validate a written BENCH_ring.json "
+                         "against the regression thresholds and exit "
+                         "nonzero on failure (no benchmarks are run)")
     args = ap.parse_args()
-    print(json.dumps(run(out_path=args.out), indent=1))
+    if args.check:
+        sys.exit(0 if check_bench_ring(args.check) else 1)
+    print(json.dumps(run(out_path=args.out, devices=args.devices), indent=1))

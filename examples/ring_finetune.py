@@ -32,7 +32,7 @@ def main():
     # activation cache over 4 epoch-stable batch slots, metrics sync only
     # every log_every rounds (async dispatch preserved).
     sess = RingSession.create(cfg, tc, backend="cached", n_stages=4,
-                              slots_per_epoch=4)
+                              slots_per_epoch=4, cache_dtype="bf16")
     hist = sess.run(16, log_every=4, callbacks=[LoggingCallback(every=4)])
     best = min(h["loss"] for h in hist)
     steps = hist[-1]["step"]
@@ -46,7 +46,9 @@ def main():
     print(f"activation cache: {last['cache_hits']:.0f} hits / "
           f"{last['cache_misses']:.0f} misses "
           f"(hit rate {last['cache_hit_rate']:.0%}), "
-          f"{last['cache_invalidations']:.0f} boundary-drop invalidation(s)")
+          f"{last['cache_invalidations']:.0f} boundary-drop invalidation(s), "
+          f"{last['cache_dtype']} entries at "
+          f"{last['cache_bytes_per_entry'] / 1024:.0f} KiB each")
 
 
 if __name__ == "__main__":

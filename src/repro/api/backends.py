@@ -51,7 +51,8 @@ from repro.optim import adamw
 
 CACHE_STAT_KEYS = ("cache_hits", "cache_misses", "cache_hit_rate",
                    "cache_evictions", "cache_invalidations", "cache_bypasses",
-                   "cache_entries", "cache_capacity")
+                   "cache_entries", "cache_capacity", "cache_dtype",
+                   "cache_bytes_per_entry", "cache_buffer_bytes")
 
 
 def _default_params(cfg: ModelConfig, tc: TrainConfig):
@@ -168,14 +169,16 @@ class FusedBackend(_RingBackendBase):
     name = "fused"
 
     def __init__(self, cfg, tc, policy, *, n_stages: int, params=None,
-                 cache_capacity: int = 0):
+                 cache_capacity: int = 0, packed: bool = True,
+                 cache_dtype: str = "native"):
         from repro.core.executor import RingExecutor
 
         super().__init__(cfg, tc, policy, n_stages=n_stages, params=params)
         self.driver = RingExecutor(cfg, tc, self.mesh, self._init_params,
                                    n_stages, tc.n_microbatches,
                                    cache_capacity=cache_capacity,
-                                   schedule=policy)
+                                   schedule=policy, packed=packed,
+                                   cache_dtype=cache_dtype)
 
     @property
     def compile_count(self) -> int:
@@ -219,13 +222,15 @@ class CachedBackend(FusedBackend):
     name = "cached"
 
     def __init__(self, cfg, tc, policy, *, n_stages: int, cache_capacity: int,
-                 params=None):
+                 params=None, packed: bool = True,
+                 cache_dtype: str = "native"):
         if cache_capacity < 1:
             raise ValueError(
                 f"CachedBackend needs cache_capacity >= 1 (got "
                 f"{cache_capacity}); use FusedBackend for uncached rounds")
         super().__init__(cfg, tc, policy, n_stages=n_stages, params=params,
-                         cache_capacity=cache_capacity)
+                         cache_capacity=cache_capacity, packed=packed,
+                         cache_dtype=cache_dtype)
 
 
 class PjitBackend:

@@ -73,6 +73,7 @@ class RingSession:
                n_stages: Optional[int] = None,
                slots_per_epoch: Optional[int] = None,
                cache_capacity: Optional[int] = None,
+               packed: bool = True, cache_dtype: str = "native",
                impl: str = "jnp", params: Optional[Dict[str, Any]] = None,
                data: Any = None, callbacks: Sequence[Callback] = (),
                log=print) -> "RingSession":
@@ -81,9 +82,14 @@ class RingSession:
         {'interval', 'plateau', None=paper rule} (or an UnfreezePolicy).
 
         ``cached`` needs ``slots_per_epoch`` (the cache's key space);
-        ``cache_capacity`` defaults to it.  ``data=None`` builds the standard
-        synthetic per-client datasets exactly as ``launch/train.py`` always
-        did, so session runs are comparable to the seed drivers.
+        ``cache_capacity`` defaults to it.  ``packed`` (fused/cached) selects
+        the packed-conveyor Phase A (one ``S*M + F - 1``-tick stream per
+        round; False = the per-owner scan, kept for A/B benchmarking);
+        ``cache_dtype`` in {'native', 'f32', 'bf16', 'int8'} compresses the
+        activation-cache entries (bf16 halves, int8 quarters the bytes per
+        entry).  ``data=None`` builds the standard synthetic per-client
+        datasets exactly as ``launch/train.py`` always did, so session runs
+        are comparable to the seed drivers.
         """
         policy = resolve_policy(policy, tc)
         S = n_stages or tc.n_stages
@@ -110,7 +116,11 @@ class RingSession:
                         f"capture overhead every round) — raise the capacity "
                         f"or use backend='fused'")
                 be = CachedBackend(cfg, tc, policy, n_stages=S,
-                                   cache_capacity=cap, params=params)
+                                   cache_capacity=cap, params=params,
+                                   packed=packed, cache_dtype=cache_dtype)
+            elif backend == "fused":
+                be = FusedBackend(cfg, tc, policy, n_stages=S, params=params,
+                                  packed=packed, cache_dtype=cache_dtype)
             else:
                 be = BACKENDS[backend](cfg, tc, policy, n_stages=S,
                                        params=params)
@@ -134,7 +144,8 @@ class RingSession:
                                         slots_per_epoch=slots_per_epoch))
         create_args = {"backend": be.name, "n_stages": getattr(be, "S", None),
                        "slots_per_epoch": slots_per_epoch,
-                       "cache_capacity": cache_capacity, "impl": impl}
+                       "cache_capacity": cache_capacity, "impl": impl,
+                       "packed": packed, "cache_dtype": cache_dtype}
         return cls(cfg, tc, be, policy, data, callbacks=callbacks,
                    create_args=create_args)
 
@@ -275,7 +286,8 @@ class RingSession:
         ex = meta["extra"]
         if backend is None:
             backend = ex.get("backend", "fused")
-        for k in ("n_stages", "slots_per_epoch", "cache_capacity", "impl"):
+        for k in ("n_stages", "slots_per_epoch", "cache_capacity", "impl",
+                  "packed", "cache_dtype"):
             if k in ex and ex[k] is not None:
                 create_kwargs.setdefault(k, ex[k])
         sess = cls.create(cfg, tc, backend=backend, policy=policy,

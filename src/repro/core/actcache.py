@@ -19,15 +19,40 @@ Storage is a single preallocated **donated ring buffer** on device:
     dynamic-index inside their own executable, so a cache hit costs zero
     host<->device traffic and zero recompilation (the row index is traced).
 
+Compressed entries (``dtype=``): edge memory is the binding constraint —
+``capacity`` caps well below ``slots_per_epoch`` on realistic configs — so
+the buffer can store entries below capture precision, 2-4x more entries per
+byte:
+
+  * ``'native'`` (default) — store bits exactly as captured (a bf16 model's
+    activations stay bf16; lossless),
+  * ``'f32'`` — upcast to float32 (lossless for bf16/f32 sources; the
+    full-precision reference mode),
+  * ``'bf16'`` — store bfloat16 (lossless when the model computes in bf16,
+    ~3 decimal digits otherwise; half the bytes of f32),
+  * ``'int8'`` — symmetric per-row int8 (the same ``_quant``/``_dequant``
+    scheme as ``models/blocks.py``'s KV cache: one f32 scale per trailing
+    ``d_model`` row, stored in a **scale sidecar** buffer alongside the ring
+    buffer; ~quarter the bytes of f32 at ~0.4% max row error).
+
+Quantization happens inside the donated writer jit on ``put``; consumers
+dequantize inside their own executable via :func:`dequantize` (the executor
+bakes the static ``dtype`` into its cached executable, so a hit still costs
+zero host<->device traffic).  ``stats()`` reports the realized bytes/entry
+so hit-rate-per-byte is measurable (``benchmarks/pipeline_bench.py``).
+
 Keys are ``(batch_slot, boundary)``.  Eviction is LRU over a fixed number of
-rows (``capacity``).  Because the schedule is monotone (enforced by
-``core/unfreeze.py``), a boundary drop makes *every* entry permanently
-unreachable; ``invalidate()`` drops them all in one step and counts the event.
+rows (``capacity``); free rows are tracked in an O(1) free list (steady-state
+``put`` never scans the capacity).  Because the schedule is monotone
+(enforced by ``core/unfreeze.py``), a boundary drop makes *every* entry
+permanently unreachable; ``invalidate()`` drops them all in one step and
+counts the event.
 """
 from __future__ import annotations
 
+import math
 from collections import OrderedDict
-from typing import Any, Dict, Hashable, Optional, Tuple
+from typing import Any, Dict, Hashable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,26 +60,82 @@ from jax import lax
 
 Array = jax.Array
 
+CACHE_DTYPES = ("native", "f32", "bf16", "int8")
+
+_STORAGE = {"f32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
+
+
+def quantize(entry: Array, dtype: str) -> Tuple[Array, Optional[Array]]:
+    """Entry -> (stored, scales-or-None) under cache dtype ``dtype``.
+
+    ``int8`` uses symmetric per-row quantization over the trailing (feature)
+    axis — the ``models/blocks.py`` KV-cache scheme — with f32 scales.
+    Traceable (runs inside the donated writer jit).
+    """
+    if dtype == "int8":
+        tf = entry.astype(jnp.float32)
+        s = jnp.max(jnp.abs(tf), axis=-1, keepdims=True)
+        s = jnp.maximum(s, 1e-6) / 127.0
+        q = jnp.clip(jnp.round(tf / s), -127, 127).astype(jnp.int8)
+        return q, s
+    if dtype == "native":
+        return entry, None
+    return entry.astype(_STORAGE[dtype]), None
+
+
+def dequantize(stored: Array, scales: Optional[Array], dtype: str,
+               out_dtype) -> Array:
+    """Inverse of :func:`quantize`, cast to the consumer's compute dtype.
+
+    Traceable — the executor's cached executable calls this on the
+    dynamically-indexed row so dequantization stays on device.  ``'native'``
+    entries pass through bit-exact (no cast).
+    """
+    if dtype == "int8":
+        return (stored.astype(jnp.float32) * scales).astype(out_dtype)
+    if dtype == "native":
+        return stored
+    return stored.astype(out_dtype)
+
+
+def storage_dtype(dtype: str, src_dtype) -> Any:
+    """The on-buffer dtype for cache mode ``dtype`` given the captured
+    entries' dtype."""
+    if dtype == "native":
+        return jnp.dtype(src_dtype)
+    return jnp.dtype(_STORAGE[dtype])
+
 
 class ActivationCache:
     """LRU cache of boundary activations in one donated device ring buffer.
 
     ``capacity`` is the number of entries (batch slots) held at once;
     ``capacity == 0`` disables the cache (every ``index_of`` misses, ``put``
-    is a no-op).  ``sharding`` (optional) is applied to the buffer when it is
-    first allocated — pass the row sharding extended with a leading
-    replicated axis, e.g. ``NamedSharding(mesh, P(None, 'stage'))``.
+    is a no-op).  ``dtype`` selects the storage precision (see module
+    docstring); ``sharding`` (optional) is applied to the buffer (and the
+    int8 scale sidecar) when first allocated — pass the row sharding extended
+    with a leading replicated axis, e.g. ``NamedSharding(mesh, P(None,
+    'stage'))``.
     """
 
-    def __init__(self, capacity: int, *, sharding: Optional[Any] = None):
+    def __init__(self, capacity: int, *, dtype: str = "native",
+                 sharding: Optional[Any] = None):
         if capacity < 0:
             raise ValueError(f"capacity must be >= 0, got {capacity}")
+        if dtype not in CACHE_DTYPES:
+            raise ValueError(f"dtype must be one of {CACHE_DTYPES}, "
+                             f"got {dtype!r}")
         self.capacity = capacity
+        self.dtype = dtype
         self.sharding = sharding
         self._buf: Optional[Array] = None
+        self._scales: Optional[Array] = None
         self._rows: "OrderedDict[Hashable, int]" = OrderedDict()  # key -> row
+        # O(1) free-row bookkeeping: rows not in _rows.values(); pop() beats
+        # the old O(capacity) first-free scan at large capacities.
+        self._free: List[int] = list(range(capacity - 1, -1, -1))
         self._entry_shape: Optional[Tuple[int, ...]] = None
-        self._entry_dtype = None
+        self._src_dtype = None
         self._writer = None
         self.hits = 0
         self.misses = 0
@@ -72,8 +153,21 @@ class ActivationCache:
         assert self._buf is not None, "cache is empty — no buffer yet"
         return self._buf
 
+    @property
+    def src_dtype(self):
+        """Dtype of the captured (pre-quantization) entries; None until the
+        first ``put`` fixes it."""
+        return self._src_dtype
+
+    @property
+    def scales(self) -> Optional[Array]:
+        """The int8 scale sidecar ([capacity, *entry_shape[:-1], 1], f32);
+        None for non-int8 dtypes."""
+        return self._scales
+
     def compatible(self, shape: Tuple[int, ...], dtype=None) -> bool:
-        """Can an entry of this shape (and dtype, if given) live in the buffer?
+        """Can an entry of this (pre-quantization) shape — and source dtype,
+        if given — live in the buffer?
 
         Before the first ``put`` any shape fits; afterwards the buffer is
         fixed and mismatching batches must bypass the cache.
@@ -84,32 +178,65 @@ class ActivationCache:
             return True
         if tuple(shape) != self._entry_shape:
             return False
-        return dtype is None or jnp.dtype(dtype) == self._entry_dtype
+        return dtype is None or jnp.dtype(dtype) == self._src_dtype
 
     # ------------------------------------------------------------------
+    def entry_bytes(self) -> Optional[int]:
+        """Realized bytes per entry (buffer row + scale-sidecar row); None
+        before the first allocation."""
+        if self._buf is None:
+            return None
+        total = self._buf.dtype.itemsize * math.prod(self._buf.shape[1:])
+        if self._scales is not None:
+            total += (self._scales.dtype.itemsize
+                      * math.prod(self._scales.shape[1:]))
+        return total
+
     def _ensure_buffer(self, entry: Array) -> None:
         if self._buf is not None:
             return
         self._entry_shape = tuple(entry.shape)
-        self._entry_dtype = jnp.dtype(entry.dtype)
+        self._src_dtype = jnp.dtype(entry.dtype)
+        store_dt = storage_dtype(self.dtype, self._src_dtype)
         shape = (self.capacity,) + self._entry_shape
-        if self.sharding is not None:
-            # allocate directly sharded — never materialize the whole buffer
-            # on one device (it may only fit stage-sharded)
-            self._buf = jax.jit(lambda: jnp.zeros(shape, entry.dtype),
-                                out_shardings=self.sharding)()
-        else:
-            self._buf = jnp.zeros(shape, entry.dtype)
-        write = lambda b, v, i: lax.dynamic_update_index_in_dim(b, v, i, 0)
+
+        def alloc(s, dt):
+            if self.sharding is not None:
+                # allocate directly sharded — never materialize the whole
+                # buffer on one device (it may only fit stage-sharded)
+                return jax.jit(lambda: jnp.zeros(s, dt),
+                               out_shardings=self.sharding)()
+            return jnp.zeros(s, dt)
+
+        self._buf = alloc(shape, store_dt)
         out_shardings = self.sharding if self.sharding is not None else None
-        self._writer = jax.jit(write, donate_argnums=(0,),
-                               out_shardings=out_shardings)
+        if self.dtype == "int8":
+            self._scales = alloc(shape[:-1] + (1,), jnp.float32)
+
+            def write(b, sb, v, i):
+                q, s = quantize(v, "int8")
+                return (lax.dynamic_update_index_in_dim(b, q, i, 0),
+                        lax.dynamic_update_index_in_dim(sb, s, i, 0))
+
+            self._writer = jax.jit(
+                write, donate_argnums=(0, 1),
+                out_shardings=(out_shardings, out_shardings))
+        else:
+            dt = self.dtype
+
+            def write(b, v, i):
+                q, _ = quantize(v, dt)
+                return lax.dynamic_update_index_in_dim(b, q, i, 0)
+
+            self._writer = jax.jit(write, donate_argnums=(0,),
+                                   out_shardings=out_shardings)
 
     def put(self, key: Hashable, entry: Array) -> bool:
         """Insert ``entry`` under ``key`` (evicting LRU if full).
 
-        Returns False (and counts a bypass) when the entry cannot live in the
-        buffer — capacity 0, or a shape/dtype mismatch with the allocated
+        Quantizes to the cache dtype inside the donated writer jit.  Returns
+        False (and counts a bypass) when the entry cannot live in the buffer
+        — capacity 0, or a shape/source-dtype mismatch with the allocated
         buffer (the batch doesn't fit).  The caller falls back to the
         uncached path; nothing breaks.
         """
@@ -123,9 +250,12 @@ class ActivationCache:
             _, row = self._rows.popitem(last=False)      # evict LRU
             self.evictions += 1
         else:
-            used = set(self._rows.values())
-            row = next(r for r in range(self.capacity) if r not in used)
-        self._buf = self._writer(self._buf, entry, row)
+            row = self._free.pop()                       # O(1), never scans
+        if self.dtype == "int8":
+            self._buf, self._scales = self._writer(
+                self._buf, self._scales, entry, row)
+        else:
+            self._buf = self._writer(self._buf, entry, row)
         self._rows[key] = row
         return True
 
@@ -149,6 +279,7 @@ class ActivationCache:
         """
         n = len(self._rows)
         self._rows.clear()
+        self._free = list(range(self.capacity - 1, -1, -1))
         if n:
             self.invalidations += 1
         return n
@@ -156,6 +287,7 @@ class ActivationCache:
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
         total = self.hits + self.misses
+        eb = self.entry_bytes()
         return {
             "cache_hits": self.hits,
             "cache_misses": self.misses,
@@ -165,4 +297,7 @@ class ActivationCache:
             "cache_bypasses": self.bypasses,
             "cache_entries": len(self._rows),
             "cache_capacity": self.capacity,
+            "cache_dtype": self.dtype,
+            "cache_bytes_per_entry": eb if eb is not None else 0,
+            "cache_buffer_bytes": (eb or 0) * self.capacity,
         }

@@ -16,6 +16,15 @@ on the adapters, replicated AdamW on the head) — entirely on device:
   * nothing syncs to the host: ``round()`` returns device arrays; callers
     ``float()`` them once per logging interval (async dispatch).
 
+Packed-conveyor Phase A (``packed=True``, the default): instead of re-running
+a ``M + F - 1``-tick frozen-trunk pipeline inside every owner-iteration of the
+scan, the executor runs ``pipeline.ring_phase_a_packed``'s single
+``S*M + F - 1``-tick conveyor ONCE per round before the scan and feeds the
+owner iterations from the resulting ``[S, M, ...]`` boundary stack — the
+frozen trunk is round-constant, so the streams pack back-to-back and the
+round saves ``(S-1)*(F-1)`` fill/drain ticks.  ``packed=False`` keeps the
+per-owner scheme (A/B benchmarked in ``benchmarks/pipeline_bench.py``).
+
 Frozen-trunk activation cache (Phase-A skip, ``core/actcache.py``): with a
 ``cache_capacity`` and slot-keyed batches, the executor builds up to three
 executables per boundary —
@@ -28,6 +37,11 @@ executables per boundary —
     straight into Phase B: no embed, no ``all_gather``, no frozen-trunk ticks.
     The row and the owner are traced, so one executable serves every slot and
     owner; the gather of the cached activations happens on device.
+
+``cache_dtype`` ({'native', 'f32', 'bf16', 'int8'}) compresses the cache's
+entries — bf16 halves, int8 (per-row scales in a sidecar buffer) quarters the
+bytes per entry, 2-4x more slots per byte of cache budget; the cached
+executable dequantizes on device right after the row gather.
 
 Boundary drops invalidate the whole cache (the unfreeze schedule is monotone
 top-down — enforced here and in ``core/unfreeze.py``).  Batches whose shapes
@@ -50,6 +64,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import actcache
 from repro.core import pipeline as pl
 from repro.core.actcache import ActivationCache
 from repro.core.unfreeze import UnfreezeSchedule, depth_to_boundary
@@ -92,7 +107,9 @@ def ring_opt_specs() -> Dict[str, Any]:
 
 def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
                      n_stages: int, boundary: int, n_micro: int,
-                     on_trace=None, mode: str = "direct"):
+                     on_trace=None, mode: str = "direct",
+                     packed: bool = True, cache_dtype: str = "native",
+                     cache_src_dtype: Any = None):
     """Build the fused round in one of three modes:
 
       direct :  fn(stage_blocks, shared, opt_state, tokens, labels)
@@ -105,14 +122,29 @@ def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
                 where ``cache_buf`` is the actcache ring buffer
                 ([capacity, S_stage, S_owner, M, mb, seq, D], sharded
                 P(None, 'stage')) and ``row`` a traced i32 row index.
+                With ``cache_dtype='int8'`` the signature gains a
+                ``cache_scales`` sidecar after ``cache_buf``; entries are
+                dequantized on device right after the row gather
+                (``actcache.dequantize`` with the static ``cache_dtype``).
                 Phase A (embed + all_gather + frozen-trunk ticks) is absent
                 from the executable entirely.
 
-    Static per build: (boundary, mode).  ``on_trace`` (if given) is called
-    each time the function body is traced — i.e. once per XLA compilation —
-    which is how tests count executables.  Wrap the result in
-    ``jax.jit(..., donate_argnums=(0, 1, 2))`` (RingExecutor does; the cache
-    buffer is never donated — it outlives the round).
+    ``packed`` (direct/capture only) selects the Phase-A scheme: True runs
+    ``pipeline.ring_phase_a_packed``'s single ``S*M + F - 1``-tick conveyor
+    once per round before the owner scan (the frozen trunk is round-constant,
+    so all S owners' streams pack back-to-back, saving ``(S-1)*(F-1)``
+    fill/drain ticks); False keeps the per-owner ``M + F - 1``-tick pipeline
+    inside the scan (the PR-2 scheme, kept for A/B benchmarking).  Both are
+    numerically the same per microbatch.  At ``F <= 1`` the saving is zero
+    while the conveyor would still hold the whole ``[S*M, ...]`` stream live,
+    so ``packed`` silently falls back to the scan there (measured ~9%
+    slower otherwise on the 2-device mesh — see BENCH_ring_2dev.json).
+
+    Static per build: (boundary, mode, packed, cache_dtype).  ``on_trace``
+    (if given) is called each time the function body is traced — i.e. once
+    per XLA compilation — which is how tests count executables.  Wrap the
+    result in ``jax.jit(..., donate_argnums=(0, 1, 2))`` (RingExecutor does;
+    the cache buffers are never donated — they outlive the round).
     """
     assert mode in FUSED_MODES, mode
     S = n_stages
@@ -121,9 +153,16 @@ def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
     F = boundary // lps
     phase_a = pl.ring_phase_a(cfg, n_stages=S, boundary=boundary,
                               n_micro=n_micro)
+    phase_a_packed = pl.ring_phase_a_packed(cfg, n_stages=S, boundary=boundary,
+                                            n_micro=n_micro)
     phase_b = pl.ring_phase_b(cfg, n_stages=S, boundary=boundary,
                               n_micro=n_micro)
     lr = jnp.float32(tc.learning_rate)
+    # what Phase B received at capture time: compressed entries dequantize
+    # back to exactly this dtype (the captured activations' own dtype when
+    # the executor knows it, else the model compute dtype).
+    compute_dtype = jnp.dtype(cache_src_dtype if cache_src_dtype is not None
+                              else cfg.dtype)
 
     def run_round(stage_blocks, shared, opt_state, get_h_B, my_labels):
         """Owner scan + stage-masked optimizer, Phase-A source abstracted:
@@ -189,12 +228,28 @@ def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
                                    (mb, seq))
             emb_g = pl.gather_embeddings(cfg, shared_rest, my_tokens, pos)
 
-            def get_h_B(owner, ad):
-                return phase_a(owner, {**backbone, "adapter": ad}, emb_g)
+            if packed and F >= 2:
+                # One continuous conveyor over ALL owners' frozen-trunk
+                # streams, run before the scan.  Phase A only reads the
+                # frozen stages' blocks, and the stage-masked optimizer keeps
+                # those bit-identical across owner-iterations, so the
+                # round-start adapters give exactly what each iteration's
+                # carried adapters would have.
+                h_B_all = phase_a_packed(my_blocks, emb_g)  # [S, M, mb, seq, D]
+
+                def get_h_B(owner, ad):
+                    return lax.dynamic_index_in_dim(h_B_all, owner, 0,
+                                                    keepdims=False)
+            else:
+
+                def get_h_B(owner, ad):
+                    return phase_a(owner, {**backbone, "adapter": ad}, emb_g)
 
             blocks2, shared2, opt2, metrics, h_caps = run_round(
                 stage_blocks, shared, opt_state, get_h_B, my_labels)
             if mode == "capture":
+                # packed capture writes the whole owner stack in one pass —
+                # h_caps is the scan-stacked copy of h_B_all either way.
                 return blocks2, shared2, opt2, metrics, h_caps[None]
             return blocks2, shared2, opt2, metrics
 
@@ -209,12 +264,12 @@ def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
 
     # mode == "cached": Phase A replaced by an on-device gather from the ring
     # buffer — the executable never sees tokens or the embedding table.
-    def fused_cached(stage_blocks, shared, opt_state, cache_buf, row, labels):
-        if on_trace is not None:
-            on_trace()
+    # Compressed entries are dequantized right after the row gather, inside
+    # this executable (static ``cache_dtype``), then fed to Phase B in the
+    # model's compute dtype — a hit costs zero host<->device traffic at any
+    # storage precision.
+    def cached_body(stage_blocks, shared, opt_state, h_slot, labels):
         my_labels = labels[0]
-        my_cache = cache_buf[:, 0]                 # [cap, S_owner, M, mb, seq, D]
-        h_slot = lax.dynamic_index_in_dim(my_cache, row, 0, keepdims=False)
 
         def get_h_B(owner, ad):
             return lax.dynamic_index_in_dim(h_slot, owner, 0, keepdims=False)
@@ -222,6 +277,36 @@ def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
         blocks2, shared2, opt2, metrics, _ = run_round(
             stage_blocks, shared, opt_state, get_h_B, my_labels)
         return blocks2, shared2, opt2, metrics
+
+    def _row(buf, row):
+        # [cap, S_stage=1(local), S_owner, ...] -> this stage's row
+        return lax.dynamic_index_in_dim(buf[:, 0], row, 0, keepdims=False)
+
+    if cache_dtype == "int8":
+
+        def fused_cached_q(stage_blocks, shared, opt_state, cache_buf,
+                           cache_scales, row, labels):
+            if on_trace is not None:
+                on_trace()
+            h_slot = actcache.dequantize(
+                _row(cache_buf, row), _row(cache_scales, row), "int8",
+                compute_dtype)
+            return cached_body(stage_blocks, shared, opt_state, h_slot,
+                               labels)
+
+        opt_spec = ring_opt_specs()
+        return compat.shard_map(
+            fused_cached_q, mesh=mesh,
+            in_specs=(P("stage"), P(), opt_spec, P(None, "stage"),
+                      P(None, "stage"), P(), P("stage")),
+            out_specs=(P("stage"), P(), opt_spec, (P(), P())))
+
+    def fused_cached(stage_blocks, shared, opt_state, cache_buf, row, labels):
+        if on_trace is not None:
+            on_trace()
+        h_slot = actcache.dequantize(_row(cache_buf, row), None, cache_dtype,
+                                     compute_dtype)
+        return cached_body(stage_blocks, shared, opt_state, h_slot, labels)
 
     opt_spec = ring_opt_specs()
     return compat.shard_map(
@@ -254,10 +339,13 @@ class RingExecutor:
     def __init__(self, cfg: ModelConfig, tc: TrainConfig, mesh: Mesh,
                  params: Dict[str, Any], n_stages: int, n_micro: int, *,
                  donate: bool = True, cache_capacity: int = 0,
-                 schedule: Optional[Any] = None):
+                 schedule: Optional[Any] = None, packed: bool = True,
+                 cache_dtype: str = "native"):
         assert len(cfg.pattern) == 1, "ring executor needs a uniform pattern"
         self.cfg, self.tc, self.mesh = cfg, tc, mesh
         self.S, self.M = n_stages, n_micro
+        self.packed = packed
+        self.cache_dtype = cache_dtype
         self.lps = cfg.repeats // n_stages
         self.stage_blocks, self.shared = pl.stage_stack(params, cfg, n_stages)
         self._params_rest = {k: v for k, v in params.items()
@@ -273,7 +361,7 @@ class RingExecutor:
         self.cache: Optional[ActivationCache] = None
         if cache_capacity:
             self.cache = ActivationCache(
-                cache_capacity,
+                cache_capacity, dtype=cache_dtype,
                 sharding=NamedSharding(mesh, P(None, "stage")))
         self._fns: Dict[Tuple[int, str], Any] = {}  # (boundary, mode) -> jit fn
         self.trace_counts: Dict[int, int] = {}      # boundary -> #compilations
@@ -297,9 +385,14 @@ class RingExecutor:
                 self.mode_trace_counts[(b, mo)] = (
                     self.mode_trace_counts.get((b, mo), 0) + 1)
 
+            src_dt = (self.cache.src_dtype if self.cache is not None
+                      else None)
             fused = make_fused_round(self.cfg, self.tc, self.mesh,
                                      n_stages=self.S, boundary=boundary,
-                                     n_micro=self.M, on_trace=bump, mode=mode)
+                                     n_micro=self.M, on_trace=bump, mode=mode,
+                                     packed=self.packed,
+                                     cache_dtype=self.cache_dtype,
+                                     cache_src_dtype=src_dt)
             donate = (0, 1, 2) if self.donate else ()
             self._fns[key] = jax.jit(fused, donate_argnums=donate)
         return self._fns[key]
@@ -354,10 +447,17 @@ class RingExecutor:
             row = self.cache.index_of(key)
             if row is not None:
                 fn = self._fn(boundary, "cached")
-                (self.stage_blocks, self.shared, self.opt_state,
-                 (losses, mean_loss)) = fn(
-                    self.stage_blocks, self.shared, self.opt_state,
-                    self.cache.buffer, jnp.int32(row), labels)
+                if self.cache_dtype == "int8":
+                    (self.stage_blocks, self.shared, self.opt_state,
+                     (losses, mean_loss)) = fn(
+                        self.stage_blocks, self.shared, self.opt_state,
+                        self.cache.buffer, self.cache.scales,
+                        jnp.int32(row), labels)
+                else:
+                    (self.stage_blocks, self.shared, self.opt_state,
+                     (losses, mean_loss)) = fn(
+                        self.stage_blocks, self.shared, self.opt_state,
+                        self.cache.buffer, jnp.int32(row), labels)
                 cache_hit = True
             else:
                 fn = self._fn(boundary, "capture")

@@ -40,6 +40,17 @@ consume them (the executor split):
     ``ring_phase_b`` (boundary activations -> local loss), exposed separately
     so the executor can cache the Phase-A output.
 
+Packed-conveyor Phase A (``ring_phase_a_packed``):
+
+  The fused executor's owner scan re-enters Phase A once per owner — S
+  independent ``M + F - 1``-tick pipelines per round, each paying its own
+  ``F - 1``-tick fill/drain bubble.  Because the frozen trunk is constant for
+  the whole round, all S owners' streams can instead be packed back-to-back
+  into ONE ``S*M + F - 1``-tick conveyor run before the owner scan, which
+  then consumes the resulting ``[S, M, ...]`` boundary stack by dynamic
+  index.  Saves ``(S-1)*(F-1)`` ticks per round on every direct/capture
+  round; capture writes all S owners' boundary activations in one pass.
+
 Phase-A skip (the frozen-trunk activation cache, ``core/actcache.py``):
 
   Everything Phase A reads — the embedding table, the frozen trunk's backbone
@@ -314,6 +325,61 @@ def ring_phase_a(cfg: ModelConfig, *, n_stages: int, boundary: int,
     return phase_a
 
 
+def ring_phase_a_packed(cfg: ModelConfig, *, n_stages: int, boundary: int,
+                        n_micro: int):
+    """Packed-conveyor Phase A: ALL owners' boundary inputs in one pipeline.
+
+    The per-owner ``ring_phase_a`` runs S independent ``M + F - 1``-tick
+    pipelines per round (one inside each owner-iteration of the executor's
+    scan), so each owner re-pays the ``F - 1``-tick fill/drain bubble.  But
+    everything Phase A reads is frozen for the whole round — the stage-masked
+    optimizer keeps frozen adapters bit-identical across owner-iterations —
+    so nothing forces the streams apart: this builder concatenates all S
+    owners' microbatches into one continuous ``S*M``-deep injection stream
+    and runs a single ``S*M + F - 1``-tick conveyor, the paper's "clients
+    with all-frozen adapters continuously forward consecutive batches" taken
+    across initiators.  Per round that saves ``(S-1)*(F-1)`` ticks
+    (``pipeline_tick_counts(packed=True)`` pins both formulas against the
+    discrete-event simulator).
+
+    Returns ``fn(my_blocks, emb_g) -> h_B_all`` ([S_owner, M, mb, seq, D]
+    stage-local): owner ``o``'s slice is bit-for-bit what ``ring_phase_a``
+    would have produced for that owner (same per-microbatch op sequence, only
+    the conveyor length differs), emitted under ``stop_gradient``.  There is
+    no ``owner`` argument — the executor indexes the stack inside its owner
+    scan, and capture mode writes the whole stack to the cache in one pass.
+    """
+    S = n_stages
+    _, F = _ring_geometry(cfg, n_stages, boundary)
+    M = n_micro
+    fwd_perm = [(i, (i + 1) % S) for i in range(S)]
+
+    def phase_a_packed(my_blocks, emb_g):
+        s = lax.axis_index("stage")
+        seq = emb_g.shape[3]
+        mb = emb_g.shape[2]
+        pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (mb, seq))
+
+        # Owner-major injection stream: conveyor slot o*M + m carries owner
+        # o's microbatch m.  ``emb_g`` is the all_gather'd (replicated)
+        # embedding stack and only the rel-0 stage of the tick pipeline ever
+        # reads its injection (``_tick_phase`` masks every other stage), so
+        # stage 0 reading ``emb_g[o, m]`` is exactly ``ring_phase_a``'s
+        # owner -> stage-0 dynamic permute for every owner at once.
+        inject = emb_g.reshape((S * M,) + emb_g.shape[2:])
+        if F > 0:
+            outs = _tick_phase(cfg, s, pos, fwd_perm, S * M,
+                               lax.stop_gradient(my_blocks),
+                               lax.stop_gradient(inject), 0, F)
+            outs = lax.stop_gradient(outs)
+            h = lax.ppermute(outs, "stage", fwd_perm)      # stage F-1 -> F
+        else:
+            h = inject
+        return lax.stop_gradient(h.reshape((S, M) + emb_g.shape[2:]))
+
+    return phase_a_packed
+
+
 def ring_phase_b(cfg: ModelConfig, *, n_stages: int, boundary: int,
                  n_micro: int):
     """Phase B of the local round: stage-``F`` inputs -> local masked loss.
@@ -398,20 +464,42 @@ def ring_round_local(cfg: ModelConfig, *, n_stages: int, boundary: int,
 
 
 def pipeline_tick_counts(n_stages: int, n_micro: int, boundary: int, lps: int,
-                         *, cached: bool = False) -> Dict[str, int]:
+                         *, cached: bool = False, packed: bool = False
+                         ) -> Dict[str, int]:
     """Analytic tick counts (used by tests and the §Perf log).
 
     PipeAdapter (boundary 0): fwd M+S-1, bwd M+S-1.
     RingAda: fwd (M+F-1) + (M+S_hot-1) + 1 hop, bwd M+S_hot-1.
     RingAda + actcache steady state (``cached=True``): the whole Phase-A tick
     scan vanishes — fwd M+S_hot-1 only, bwd unchanged.
+    RingAda + packed conveyor (``packed=True``, ``ring_phase_a_packed``):
+    Phase A leaves the owner-iteration — all S owners' frozen-trunk streams
+    run once per ROUND as one ``S*M + F - 1``-tick conveyor instead of S
+    separate ``M + F - 1``-tick pipelines (``S*(M+F-1)`` ticks), saving
+    ``(S-1)*(F-1)`` fill/drain bubble ticks per round.
+
+    ``fwd_ticks``/``bwd_ticks`` are per owner-iteration (Phase A excluded
+    when it is hoisted or skipped); ``phase_a_round_ticks`` is the whole
+    round's Phase-A conveyor length and ``phase_a_saved_ticks`` the packed
+    scheme's per-round saving — both pinned against the discrete-event
+    simulator in tests/test_simulator.py.
     """
     F = boundary // lps
     S_hot = n_stages - F
-    phase_a = 0 if (cached or F == 0) else n_micro + F - 1
+    phase_a = 0 if (cached or packed or F == 0) else n_micro + F - 1
+    if cached or F == 0:
+        a_round = 0
+    elif packed:
+        a_round = n_stages * n_micro + F - 1
+    else:
+        a_round = n_stages * (n_micro + F - 1)
+    saved = ((n_stages - 1) * (F - 1)
+             if (packed and not cached and F > 0) else 0)
     return {
         "fwd_ticks": phase_a + n_micro + S_hot - 1,
         "bwd_ticks": n_micro + S_hot - 1,
         "frozen_stages": F,
         "hot_stages": S_hot,
+        "phase_a_round_ticks": a_round,
+        "phase_a_saved_ticks": saved,
     }

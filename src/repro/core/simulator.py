@@ -18,6 +18,13 @@ speed, and the three schemes are replayed by a discrete-event engine:
                         the boundary activations from its local cache and the
                         pipeline starts there.  Keeps simulated and measured
                         Phase-A-skip speedups comparable.
+  * ``ringada_packed`` — RingAda with the packed Phase-A conveyor
+                        (core/pipeline.py ``ring_phase_a_packed``): with
+                        ``n_owners > 1`` the frozen devices stream ALL
+                        owner-iterations' microbatches back-to-back (no
+                        per-owner fill/drain bubble); only the hot region
+                        serializes per owner.  Validates the
+                        ``S*M + F - 1`` / ``(S-1)*(F-1)`` closed forms.
 
 Outputs per scheme: wall-clock time per epoch / to convergence, per-device peak
 memory (weights + adapters + optimizer + activation stashes + weight stashes) —
@@ -78,16 +85,36 @@ def simulate_round(scheme: str, sim: SimConfig, layers: Sequence[LayerProfile],
                    devices: Sequence[DeviceProfile],
                    unfreeze_depth: Optional[int] = None,
                    spans: Optional[List[Tuple[int, int]]] = None,
-                   cache_slots: int = 1) -> SimResult:
+                   cache_slots: int = 1, n_owners: int = 1) -> SimResult:
     """Simulate one training round (M microbatches through fwd+bwd).
 
     ``scheme='ringada_cached'`` simulates a steady-state (cache-hit) round:
     frozen devices idle, the terminator injects cached boundary activations.
-    ``cache_slots`` sizes the terminator's cache memory (entries held)."""
+    ``cache_slots`` sizes the terminator's cache memory (entries held).
+
+    ``n_owners > 1`` simulates a FULL RingAda round — ``n_owners``
+    initiator-iterations of M microbatches each.  The ring schemes then
+    differ in how the frozen trunk treats the owner change:
+
+      * ``'ringada'`` — the owner-scan barrier: owner ``o``'s microbatches
+        enter the pipeline only after owner ``o-1``'s last backward finished
+        (the fused SPMD executor's ``lax.scan`` semantics) — ``n_owners``
+        separate fill/drain bubbles.
+      * ``'ringada_packed'`` — the packed conveyor: frozen devices stream all
+        owners' microbatches back-to-back with no barrier (the paper's
+        "continuously forward consecutive batches"); only the HOT region
+        still serializes per owner (its adapters update between owners).
+        With unit-cost frozen stages this reproduces the
+        ``pipeline_tick_counts(packed=True)`` closed forms exactly — pinned
+        in tests/test_simulator.py.
+    """
     L, U, M = sim.n_layers, sim.n_devices, sim.n_microbatches
     assert len(layers) == L
     cached = scheme == "ringada_cached"
-    ring_like = scheme in ("ringada", "ringada_cached")
+    packed = scheme == "ringada_packed"
+    ring_like = scheme in ("ringada", "ringada_cached", "ringada_packed")
+    assert n_owners == 1 or ring_like, \
+        "multi-owner rounds are only defined for the ring schemes"
 
     if scheme == "single":
         dev = devices[0]
@@ -121,51 +148,65 @@ def simulate_round(scheme: str, sim: SimConfig, layers: Sequence[LayerProfile],
         b, e = spans[u]
         return _link_time(layers[e - 1].boundary_mb, devices[u].link_mbps)
 
-    # Discrete-event list scheduler. Ops: fwd(m, u) and bwd(m, u) with ring
-    # dependencies (+ link hop latencies). 1F1B (PipeDream) on hot devices:
-    # device u keeps at most W_u = U - u microbatches in flight — fwd(m, u)
-    # additionally depends on bwd(m - W_u, u). RingAda's frozen devices carry
+    # Discrete-event list scheduler. Ops: fwd(j, u) and bwd(j, u) over the
+    # global microbatch index j = owner*M + m, with ring dependencies
+    # (+ link hop latencies). 1F1B (PipeDream) on hot devices: device u keeps
+    # at most W_u = U - u of one owner's microbatches in flight — fwd(j, u)
+    # additionally depends on bwd(j - W_u, u). RingAda's frozen devices carry
     # no trainable state, so they stream forwards freely (the paper's
-    # "continuously perform the forward pass"): no 1F1B window. Devices pick
-    # the earliest-ready op, backward-first on ties (standard 1F1B priority).
+    # "continuously perform the forward pass"): no 1F1B window. Across owner
+    # boundaries: the hot region always serializes on the previous owner's
+    # last backward (its adapters update between owners); the frozen trunk
+    # does too under the scan ('ringada') but streams straight through under
+    # the packed conveyor ('ringada_packed'). Devices pick the earliest-ready
+    # op, backward-first on ties (standard 1F1B priority).
     dev_free = [0.0] * U
     busy = [0.0] * U
     done: Dict[Tuple[str, int, int], float] = {}
     remaining = []
-    for m in range(M):
+    N = n_owners * M
+    for j in range(N):
         for u in range(U):
             if cached and u < terminator:
                 continue          # frozen trunk skipped: activations cached
-            remaining.append(("fwd", m, u))
+            remaining.append(("fwd", j, u))
         for u in range(U - 1, terminator - 1, -1):
-            remaining.append(("bwd", m, u))
+            remaining.append(("bwd", j, u))
 
     def ready_time(op) -> Optional[float]:
-        kind, m, u = op
+        kind, j, u = op
+        o, m = divmod(j, M)
         if kind == "fwd":
             t = 0.0
             # the terminator's cached round reads boundary activations from
             # its local cache: no upstream forward to wait for
             if u > 0 and not (cached and u == terminator):
-                prev = done.get(("fwd", m, u - 1))
+                prev = done.get(("fwd", j, u - 1))
                 if prev is None:
                     return None
                 t = prev + hop(u - 1)
             hot = not (ring_like and u < terminator)
+            # owner barrier: everything except a packed frozen device waits
+            # for the previous owner-iteration to fully drain
+            if o > 0 and not (packed and not hot):
+                prevo = done.get(("bwd", o * M - 1, max(u, terminator)))
+                if prevo is None:
+                    return None
+                t = max(t, prevo)
             w = U - u
             if hot and m - w >= 0 and terminator <= u:
-                prevb = done.get(("bwd", m - w, max(u, terminator)))
+                prevb = done.get(("bwd", j - w, max(u, terminator)))
                 if prevb is None:
                     return None
                 t = max(t, prevb)
             return t
         # backward
         if u == U - 1:
-            prev = done.get(("fwd", m, U - 1))
+            prev = done.get(("fwd", j, U - 1))
             if prev is None:
                 return None
             return prev + sim.head_fwd_s + sim.head_bwd_s
-        nxt = done.get(("bwd", m, u + 1))
+        nxt = done.get(("bwd", j, u + 1))
         if nxt is None:
             return None
         return nxt + hop(u)
@@ -183,7 +224,7 @@ def simulate_round(scheme: str, sim: SimConfig, layers: Sequence[LayerProfile],
             if best is None or key < best_start:
                 best, best_start, best_ready = op, key, r
         assert best is not None, "dependency deadlock"
-        kind, m, u = best
+        kind, j, u = best
         dur = stage_fwd(u) if kind == "fwd" else stage_bwd(u)
         start = max(best_ready, dev_free[u])
         end = start + dur
@@ -217,6 +258,13 @@ def simulate_round(scheme: str, sim: SimConfig, layers: Sequence[LayerProfile],
                 # the boundary-activation ring buffer lives on the terminator:
                 # one boundary tensor per microbatch per cached slot
                 mem += cache_slots * M * layers[lowest_hot - 1].boundary_mb
+            if packed and u == terminator and lowest_hot > 0:
+                # conveyor queue: the frozen trunk races ahead of the hot
+                # region, so up to (n_owners - 1) later owners' boundary
+                # tensors wait at the terminator — packed trades memory for
+                # fill/drain bubbles
+                mem += ((n_owners - 1) * M
+                        * layers[lowest_hot - 1].boundary_mb)
         peak[u] = mem
 
     return SimResult(total, peak, {u: busy[u] for u in range(U)}, bubbles)

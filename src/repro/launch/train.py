@@ -77,6 +77,7 @@ def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
                log_every: int = 1, trainer: str = "fused",
                slots_per_epoch: Optional[int] = None,
                cache_capacity: Optional[int] = None,
+               packed: bool = True, cache_dtype: str = "native",
                save_path: Optional[str] = None, resume: Optional[str] = None,
                policy: Any = None, log=print) -> Dict[str, Any]:
     """Ring-pipeline training across ``n_stages`` devices — a shell over
@@ -87,7 +88,10 @@ def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
     revisits of a (slot, boundary) key skip Phase A entirely; a boundary drop
     invalidates the cache).  trainer='reference': the unfused oracle.
     ``cache_capacity`` defaults to ``slots_per_epoch``; 0 disables the cache
-    while keeping slotted batches.
+    while keeping slotted batches.  ``packed=False`` reverts Phase A to the
+    per-owner scan (the packed conveyor is on by default); ``cache_dtype``
+    compresses cache entries ('bf16' halves, 'int8' quarters the bytes per
+    entry — see ``core/actcache.py`` for the accuracy tradeoff).
     """
     if trainer not in ("fused", "reference"):
         raise ValueError(f"trainer must be 'fused' or 'reference', "
@@ -111,7 +115,9 @@ def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
         sess = RingSession.create(cfg, tc, backend=backend, policy=policy,
                                   n_stages=n_stages,
                                   slots_per_epoch=slots_per_epoch,
-                                  cache_capacity=cache_capacity, log=log)
+                                  cache_capacity=cache_capacity,
+                                  packed=packed, cache_dtype=cache_dtype,
+                                  log=log)
     t0 = time.time()
     history = sess.run(rounds, log_every=log_every,
                        callbacks=[LoggingCallback(log, every=log_every)])
@@ -157,6 +163,18 @@ def main() -> None:
     ap.add_argument("--no-cache", action="store_true",
                     help="ring mode: disable the frozen-trunk activation "
                          "cache (use for streaming/non-repeating data)")
+    ap.add_argument("--cache-dtype", choices=["native", "f32", "bf16", "int8"],
+                    default="native",
+                    help="ring mode: activation-cache storage precision — "
+                         "'native' stores entries exactly as captured, "
+                         "'bf16' halves and 'int8' (per-row scales) quarters "
+                         "the bytes per entry, fitting 2-4x more slots in "
+                         "the same --cache-capacity memory budget")
+    ap.add_argument("--no-packed", action="store_true",
+                    help="ring mode: revert Phase A to the per-owner scan "
+                         "(S separate M+F-1-tick pipelines per round) "
+                         "instead of the default packed conveyor (one "
+                         "S*M+F-1-tick stream, saving (S-1)(F-1) ticks)")
     ap.add_argument("--save", default=None,
                     help="checkpoint path (both modes): params + Adam "
                          "moments + policy + data cursor")
@@ -184,6 +202,8 @@ def main() -> None:
                          slots_per_epoch=args.slots_per_epoch or None,
                          cache_capacity=0 if args.no_cache
                          else args.cache_capacity,
+                         packed=not args.no_packed,
+                         cache_dtype=args.cache_dtype,
                          save_path=args.save, resume=args.resume)
     print(json.dumps(out["history"][-1], default=float))
 

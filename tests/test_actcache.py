@@ -101,6 +101,90 @@ def test_cache_capacity_zero_disabled():
     assert c.index_of(("s0", 3)) is None
 
 
+def test_cache_free_rows_o1_and_consistent():
+    """The free-row list replaces the O(capacity) first-free scan: rows stay
+    unique, in range, and the free list + live rows always partition
+    [0, capacity) — across fills, eviction, invalidation and refills."""
+    c = ActivationCache(3)
+
+    def check():
+        live = list(c._rows.values())
+        assert len(set(live)) == len(live)
+        assert sorted(live + c._free) == list(range(3))
+
+    for i in range(3):
+        assert c.put((f"s{i}", 3), _entry(float(i)))
+        check()
+    assert c._free == []
+    assert c.put(("s3", 3), _entry(3.0))          # evicts s0, reuses its row
+    check()
+    assert c.evictions == 1 and len(c) == 3
+    c.invalidate()
+    check()
+    assert len(c._free) == 3
+    for i in range(3):                            # refill reuses all rows
+        assert c.put((f"t{i}", 2), _entry(10.0 + i))
+        check()
+    rows = {k: c.index_of(k) for k in (("t0", 2), ("t1", 2), ("t2", 2))}
+    for k, r in rows.items():
+        assert float(c.buffer[r][0, 0]) == 10.0 + int(k[0][1])
+
+
+def test_cache_dtype_bf16_halves_bytes_roundtrip():
+    c = ActivationCache(2, dtype="bf16")
+    e = jnp.linspace(-3.0, 3.0, 6, dtype=jnp.float32).reshape(2, 3)
+    assert c.put(("s0", 3), e)
+    assert c.buffer.dtype == jnp.bfloat16
+    assert c.scales is None
+    from repro.core.actcache import dequantize
+    back = dequantize(c.buffer[c.index_of(("s0", 3))], None, "bf16",
+                      jnp.float32)
+    assert float(jnp.abs(back - e).max()) < 0.05   # bf16 has ~3 digits
+    # 2 bytes/elem vs f32's 4
+    assert c.entry_bytes() == 2 * 6
+    f = ActivationCache(2, dtype="f32")
+    f.put(("s0", 3), e)
+    assert f.entry_bytes() == 4 * 6
+
+
+def test_cache_dtype_int8_scales_sidecar_roundtrip():
+    c = ActivationCache(2, dtype="int8")
+    e = jnp.linspace(-3.0, 3.0, 8, dtype=jnp.float32).reshape(2, 4)
+    assert c.put(("s0", 3), e)
+    assert c.buffer.dtype == jnp.int8
+    assert c.scales is not None and c.scales.shape == (2, 2, 1)
+    from repro.core.actcache import dequantize
+    r = c.index_of(("s0", 3))
+    back = dequantize(c.buffer[r], c.scales[r], "int8", jnp.float32)
+    # symmetric per-row int8: error <= scale/2 = max|row| / 254
+    row_max = jnp.max(jnp.abs(e), axis=-1, keepdims=True)
+    assert bool((jnp.abs(back - e) <= row_max / 127.0).all())
+    # 1 byte/elem + one f32 scale per 4-wide row
+    assert c.entry_bytes() == 8 + 2 * 4
+    st = c.stats()
+    assert st["cache_dtype"] == "int8"
+    assert st["cache_bytes_per_entry"] == 16
+    assert st["cache_buffer_bytes"] == 32
+
+
+def test_cache_source_dtype_still_guarded_under_compression():
+    """compatible() checks the CAPTURED dtype, not the storage dtype — a
+    bf16-compressed cache of f32 activations must still bypass bf16-source
+    batches (they would silently dequantize to the wrong dtype)."""
+    c = ActivationCache(2, dtype="bf16")
+    c.put(("s0", 3), _entry(1.0))                  # f32 source
+    assert c.compatible((2, 3), jnp.float32)
+    assert not c.compatible((2, 3), jnp.bfloat16)
+    assert not c.put(("s1", 3), _entry(2.0).astype(jnp.bfloat16))
+    assert c.bypasses == 1
+
+
+def test_cache_rejects_unknown_dtype():
+    import pytest
+    with pytest.raises(ValueError):
+        ActivationCache(2, dtype="fp4")
+
+
 # ---------------------------------------------------------------------------
 # (a)+(b)+(c): cached executor vs cache-disabled fused executor, 4 devices
 # ---------------------------------------------------------------------------

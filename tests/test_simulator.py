@@ -1,7 +1,13 @@
 """The trace-based simulator must reproduce the paper's qualitative Table I:
-RingAda < PipeAdapter < Single on both time and memory."""
+RingAda < PipeAdapter < Single on both time and memory — and the packed
+Phase-A conveyor's closed-form tick counts (``S*M + F - 1`` per round,
+``(S-1)*(F-1)`` saved vs the per-owner scan) must fall out of the
+discrete-event engine, not just the formula."""
+
+import pytest
 
 from repro.core.partition import DeviceProfile
+from repro.core.pipeline import pipeline_tick_counts
 from repro.core.simulator import (LayerProfile, SimConfig, simulate_round,
                                   simulate_training)
 
@@ -62,6 +68,89 @@ def test_training_schedule_integration():
     assert t_ring < t_pipe
     assert m_ring < m_pipe
     assert len(curve) == 50 and curve == sorted(curve)
+
+
+def _tick_layers(n, n_frozen):
+    """Unit-cost frozen blocks, zero-cost hot blocks + hops: the engine's
+    time unit becomes exactly one frozen-trunk tick."""
+    frozen = LayerProfile(fwd_s=1.0, bwd_s=0.0, act_mb=1.0, weight_mb=1.0,
+                          adapter_mb=0.1, boundary_mb=0.0)
+    hot = LayerProfile(fwd_s=0.0, bwd_s=0.0, act_mb=1.0, weight_mb=1.0,
+                       adapter_mb=0.1, boundary_mb=0.0)
+    return [frozen] * n_frozen + [hot] * (n - n_frozen)
+
+
+@pytest.mark.parametrize("S,M,F", [(4, 3, 3), (4, 4, 2), (3, 2, 2), (2, 4, 1)])
+def test_packed_conveyor_ticks_match_formula(S, M, F):
+    """The discrete-event engine reproduces the closed forms the executor's
+    packed Phase A is built on: one S*M+F-1-tick conveyor per round vs the
+    scan's S separate M+F-1-tick pipelines, saving (S-1)(F-1) ticks."""
+    sim = SimConfig(n_layers=S, n_devices=S, n_microbatches=M)
+    layers = _tick_layers(S, F)
+    devices = [DeviceProfile(1.0, 4096)] * S
+    depth = S - F                                  # hot blocks above boundary
+    r_scan = simulate_round("ringada", sim, layers, devices,
+                            unfreeze_depth=depth, n_owners=S)
+    r_packed = simulate_round("ringada_packed", sim, layers, devices,
+                              unfreeze_depth=depth, n_owners=S)
+    t_scan = pipeline_tick_counts(S, M, boundary=F, lps=1)
+    t_packed = pipeline_tick_counts(S, M, boundary=F, lps=1, packed=True)
+    # formula == engine, both schemes (hot region costs 0 by construction)
+    assert r_scan.time_per_round_s == t_scan["phase_a_round_ticks"] \
+        == S * (M + F - 1)
+    assert r_packed.time_per_round_s == t_packed["phase_a_round_ticks"] \
+        == S * M + F - 1
+    # and the advertised per-round saving
+    saved = r_scan.time_per_round_s - r_packed.time_per_round_s
+    assert saved == t_packed["phase_a_saved_ticks"] == (S - 1) * (F - 1)
+
+
+def test_packed_single_owner_equals_ringada():
+    """n_owners=1 has no cross-owner bubbles to pack away: both schemes
+    reduce to the same schedule."""
+    sim = SimConfig(n_layers=12, n_devices=4, n_microbatches=8)
+    layers = [LayerProfile(0.01, 0.02, 20.0, 30.0, 0.6, 2.0)] * 12
+    devices = [DeviceProfile(1.0, 4096, 1000.0)] * 4
+    r = simulate_round("ringada", sim, layers, devices, unfreeze_depth=3)
+    p = simulate_round("ringada_packed", sim, layers, devices,
+                       unfreeze_depth=3)
+    assert p.time_per_round_s == r.time_per_round_s
+
+
+def test_packed_trades_terminator_memory_for_time():
+    """The conveyor queues later owners' boundary activations at the
+    terminator: packed is strictly faster over a full multi-owner round but
+    the terminator's peak memory grows by (n_owners-1)*M boundary tensors."""
+    S, M, F = 4, 4, 3
+    sim = SimConfig(n_layers=S, n_devices=S, n_microbatches=M)
+    frozen = LayerProfile(1.0, 0.0, 1.0, 1.0, 0.1, boundary_mb=2.0)
+    hot = LayerProfile(0.5, 1.0, 1.0, 1.0, 0.1, boundary_mb=2.0)
+    layers = [frozen] * F + [hot] * (S - F)
+    devices = [DeviceProfile(1.0, 4096)] * S
+    r = simulate_round("ringada", sim, layers, devices,
+                       unfreeze_depth=S - F, n_owners=S)
+    p = simulate_round("ringada_packed", sim, layers, devices,
+                       unfreeze_depth=S - F, n_owners=S)
+    assert p.time_per_round_s < r.time_per_round_s
+    term = F                                            # terminator device
+    extra = (S - 1) * M * 2.0
+    assert p.peak_memory_mb[term] == r.peak_memory_mb[term] + extra
+
+
+def test_tick_counts_cached_and_packed_consistent():
+    """phase_a_round_ticks: cached kills Phase A entirely, packed only the
+    cross-owner bubbles; at F<=1 or F=0 packing saves nothing."""
+    base = pipeline_tick_counts(4, 8, boundary=9, lps=3)
+    packed = pipeline_tick_counts(4, 8, boundary=9, lps=3, packed=True)
+    cached = pipeline_tick_counts(4, 8, boundary=9, lps=3, cached=True)
+    assert base["phase_a_round_ticks"] == 4 * (8 + 3 - 1)
+    assert packed["phase_a_round_ticks"] == 4 * 8 + 3 - 1
+    assert packed["phase_a_saved_ticks"] == 3 * 2
+    assert cached["phase_a_round_ticks"] == 0
+    assert cached["fwd_ticks"] == packed["fwd_ticks"]   # both hoist Phase A
+    for b, lps in ((0, 3), (3, 3)):                     # F == 0 / F == 1
+        t = pipeline_tick_counts(4, 8, boundary=b, lps=lps, packed=True)
+        assert t["phase_a_saved_ticks"] == 0
 
 
 def test_heterogeneous_devices_respected():
