@@ -329,6 +329,18 @@ def _tick_ledger(S: int, M: int, frozen: int) -> Dict[str, float]:
     return row
 
 
+def check_hetero(out_or_bench: Dict, gate) -> None:
+    """Gate: the speed-weighted partition beats uniform on the skewed mesh."""
+    het = out_or_bench.get("hetero")
+    if not het:
+        return
+    gate(het["weighted_round_s"] < het["uniform_round_s"],
+         f"speed-weighted spans {het['weighted_spans']} round "
+         f"{het['weighted_round_s']:.3f}s < uniform "
+         f"{het['uniform_round_s']:.3f}s on skewed mesh "
+         f"{het['device_speeds']}")
+
+
 def write_bench_ring(out: Dict, path: str, log=print) -> Optional[Dict]:
     """Condense the measured section into BENCH_ring.json (schema v2).
 
@@ -389,6 +401,9 @@ def write_bench_ring(out: Dict, path: str, log=print) -> Optional[Dict]:
         "n_executables": {
             name: steady[name]["n_executables"]
             for name in ("reference", "fused", "cached")},
+        # simulated skewed-mesh result: speed-weighted assign_layers spans
+        # vs the uniform split (deterministic -> gated by --check)
+        "hetero": out.get("hetero"),
     }
     with open(path, "w") as f:
         json.dump(bench, f, indent=1, sort_keys=True)
@@ -409,8 +424,10 @@ def check_bench_ring(path: str, log=print) -> bool:
     Fails when the cached steady state stops clearly beating the fused
     executor, when the packed conveyor stops beating the per-owner scan on
     first-visit/capture rounds (only meaningful at F >= 2 — at F <= 1 there
-    are no cross-owner bubbles to save, so the ratio gate is skipped), or
-    when bf16 entries stop matching the f32 hit rate at half the bytes.
+    are no cross-owner bubbles to save, so the ratio gate is skipped),
+    when bf16 entries stop matching the f32 hit rate at half the bytes, or
+    when the speed-weighted partition stops beating the uniform split on the
+    skewed simulated mesh (deterministic discrete-event model, no jitter).
 
     Threshold note: the v1 bench's headline "cached = 3x fused" came from
     single timing windows, which on host-CPU collectives jitter by 50%+ and
@@ -452,6 +469,7 @@ def check_bench_ring(path: str, log=print) -> bool:
              f"the bytes")
         drift = bf.get("loss_drift_vs_f32", 1.0)
         gate(drift < 1e-3, f"bf16 loss drift vs f32 {drift:.2e} < 1e-3")
+    check_hetero(bench, gate)
     return ok
 
 
@@ -487,6 +505,37 @@ def run(log=print, out_path: str = DEFAULT_OUT, devices: int = 4) -> Dict:
     layers = [LayerProfile(0.01, 0.02, 20.0, 30.0, 0.6, 2.0)] * 12
     sim_devices = [DeviceProfile(1.0, 4096)] * S
     sim = SimConfig(n_layers=12, n_devices=S, n_microbatches=M)
+
+    # heterogeneous mesh: the paper's speed-weighted assignment
+    # (assign_layers) vs the uniform split, on a skewed simulated mesh.
+    # Deterministic discrete-event model, so CI gates on it (--check):
+    # the speed-weighted partition must beat uniform.
+    from repro.core.partition import (parse_device_profiles, span_sizes,
+                                      spans_from_profiles)
+    skew = ([1.0, 0.5, 2.0, 1.0] * ((S + 3) // 4))[:S]
+    het_devices = [DeviceProfile(compute_speed=sp, memory_mb=4096)
+                   for sp in skew]
+    costs = [l.fwd_s + l.bwd_s for l in layers]
+    w_spans = spans_from_profiles(12, parse_device_profiles(skew),
+                                  layer_costs=costs)
+    r_uni = simulate_round("ringada", sim, layers, het_devices,
+                           unfreeze_depth=6)
+    r_wtd = simulate_round("ringada", sim, layers, het_devices,
+                           unfreeze_depth=6, spans=list(w_spans))
+    out["hetero"] = {
+        "device_speeds": skew,
+        "weighted_spans": [list(sp) for sp in w_spans],
+        "uniform_round_s": r_uni.time_per_round_s,
+        "weighted_round_s": r_wtd.time_per_round_s,
+        "speedup": r_uni.time_per_round_s / r_wtd.time_per_round_s,
+        "uniform_peak_mb": r_uni.max_memory_mb,
+        "weighted_peak_mb": r_wtd.max_memory_mb,
+    }
+    log(f"  hetero mesh (speeds {skew}): weighted spans "
+        f"{list(span_sizes(w_spans))} round={r_wtd.time_per_round_s:.3f}s "
+        f"vs uniform {r_uni.time_per_round_s:.3f}s "
+        f"({out['hetero']['speedup']:.2f}x)")
+
     util = {}
     for depth in (1, 3, 6, 12):
         r = simulate_round("ringada", sim, layers, sim_devices,

@@ -45,6 +45,8 @@ from repro import compat
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.core import pipeline as pl
 from repro.core import training
+from repro.core.partition import (parse_device_profiles, span_sizes,
+                                  spans_from_profiles, uniform_assignment)
 from repro.core.unfreeze import depth_to_boundary
 from repro.models import params as prm
 from repro.optim import adamw
@@ -61,35 +63,76 @@ def _default_params(cfg: ModelConfig, tc: TrainConfig):
 
 
 def _validate_ring(cfg: ModelConfig, n_stages: int) -> None:
-    """The ring-mode preconditions that used to live in launch/train.py."""
+    """The ring-mode preconditions that used to live in launch/train.py.
+
+    (The historical repeats-divisible-by-stages precondition is gone: the
+    ragged-span pipeline runs any contiguous layout, and ``spans=None``
+    falls back to the most balanced split.)
+    """
     if cfg.head_out is not None:
         raise ValueError(
             f"ring backends train with the LM objective, but this config has "
             f"a task head (head_out={cfg.head_out}) — the loss would be "
             f"garbage/NaN. Use an LM config, or reduce with head_out=None "
             f"like examples/ring_finetune.py.")
-    if cfg.repeats % n_stages != 0:
+    if cfg.repeats < n_stages:
         raise ValueError(
-            f"ring training needs repeats divisible by stages: "
-            f"cfg.repeats={cfg.repeats}, n_stages={n_stages}. Pick n_stages "
-            f"from the divisors of {cfg.repeats}, or a config/reduced "
-            f"variant with more repeats.")
+            f"ring training needs at least one block per stage: "
+            f"cfg.repeats={cfg.repeats} < n_stages={n_stages}.")
+
+
+def _block_weight_mb(cfg: ModelConfig) -> float:
+    """Per-block weight footprint (MB) — the memory cost Algorithm 1 charges
+    a device per assigned block when DeviceProfile budgets are finite."""
+    kind = cfg.pattern[0][0]
+    n = prm.count_params(prm.block_defs(cfg, kind)) * cfg.layers_per_repeat
+    return n * jnp.dtype(cfg.dtype).itemsize / 2**20
+
+
+def _resolve_ring_spans(cfg: ModelConfig, n_stages: int, spans,
+                        device_profiles):
+    """(spans, device_profiles) -> canonical span layout (None = balanced).
+
+    ``device_profiles`` (speeds or DeviceProfile objects, ring order) runs
+    the paper's Algorithm-1 speed-weighted assignment; an explicit ``spans``
+    ([(b, e)] pairs or a sizes list like [4, 5, 2, 3]) wins over both.
+    Profiles with FINITE ``memory_mb`` budgets also bind the assignment's
+    memory-feasibility constraint, charged at the per-block weight footprint
+    (bare speeds — the CLI path — leave memory unconstrained).
+    """
+    if spans is None and device_profiles is not None:
+        import math
+
+        profiles = parse_device_profiles(device_profiles)
+        if len(profiles) != n_stages:
+            raise ValueError(
+                f"{len(profiles)} device profiles for a {n_stages}-stage "
+                f"ring — pass exactly one per stage, in ring order")
+        mem = None
+        if any(math.isfinite(p.memory_mb) for p in profiles):
+            mem = [_block_weight_mb(cfg)] * cfg.repeats
+        spans = spans_from_profiles(cfg.repeats, profiles, layer_mem_mb=mem)
+    return pl.resolve_spans(cfg.repeats, n_stages, spans)
 
 
 class _RingBackendBase:
     """Shared plumbing for the three ring adapters (mesh, batch unpacking,
-    canonical <-> stage-stacked param translation, opt-state format tag)."""
+    canonical <-> stage-stacked param translation, opt-state format tag,
+    span-layout resolution)."""
 
     kind = "ring"
 
     def __init__(self, cfg: ModelConfig, tc: TrainConfig, policy, *,
-                 n_stages: int, params: Optional[Dict[str, Any]] = None):
+                 n_stages: int, params: Optional[Dict[str, Any]] = None,
+                 spans=None, device_profiles=None):
         from repro.launch.mesh import make_ring_mesh, require_devices
 
         _validate_ring(cfg, n_stages)
         require_devices(n_stages)
         self.cfg, self.tc, self.policy = cfg, tc, policy
         self.S = n_stages
+        self.spans = _resolve_ring_spans(cfg, n_stages, spans,
+                                         device_profiles)
         self.mesh = make_ring_mesh(n_stages)
         self._init_params = params if params is not None else _default_params(cfg, tc)
 
@@ -100,7 +143,14 @@ class _RingBackendBase:
 
     @property
     def format(self) -> str:
-        return f"ring/S{self.S}"
+        """Opt-state layout tag.  Non-default span layouts are part of the
+        format: adapter moments are padded [S, max_span, ...] per the layout,
+        so a checkpoint only restores into the same layout."""
+        default = tuple(uniform_assignment(self.cfg.repeats, self.S))
+        if self.spans == default:
+            return f"ring/S{self.S}"
+        sig = "-".join(str(n) for n in span_sizes(self.spans))
+        return f"ring/S{self.S}/spans{sig}"
 
     def export_params(self) -> Dict[str, Any]:
         return self.driver.export_params()
@@ -117,7 +167,8 @@ class _RingBackendBase:
 
     def _restack(self, params: Dict[str, Any]) -> None:
         d = self.driver
-        d.stage_blocks, d.shared = pl.stage_stack(params, self.cfg, self.S)
+        d.stage_blocks, d.shared = pl.stage_stack(params, self.cfg, self.S,
+                                                  spans=self.spans)
         d._params_rest = {k: v for k, v in params.items() if k != "blocks"}
 
 
@@ -127,12 +178,15 @@ class ReferenceBackend(_RingBackendBase):
 
     name = "reference"
 
-    def __init__(self, cfg, tc, policy, *, n_stages: int, params=None):
+    def __init__(self, cfg, tc, policy, *, n_stages: int, params=None,
+                 spans=None, device_profiles=None):
         from repro.core.ring import RingTrainer
 
-        super().__init__(cfg, tc, policy, n_stages=n_stages, params=params)
+        super().__init__(cfg, tc, policy, n_stages=n_stages, params=params,
+                         spans=spans, device_profiles=device_profiles)
         self.driver = RingTrainer(cfg, tc, self.mesh, self._init_params,
-                                  n_stages, tc.n_microbatches, schedule=policy)
+                                  n_stages, tc.n_microbatches, schedule=policy,
+                                  spans=self.spans)
 
     @property
     def compile_count(self) -> int:
@@ -170,15 +224,17 @@ class FusedBackend(_RingBackendBase):
 
     def __init__(self, cfg, tc, policy, *, n_stages: int, params=None,
                  cache_capacity: int = 0, packed: bool = True,
-                 cache_dtype: str = "native"):
+                 cache_dtype: str = "native", spans=None,
+                 device_profiles=None):
         from repro.core.executor import RingExecutor
 
-        super().__init__(cfg, tc, policy, n_stages=n_stages, params=params)
+        super().__init__(cfg, tc, policy, n_stages=n_stages, params=params,
+                         spans=spans, device_profiles=device_profiles)
         self.driver = RingExecutor(cfg, tc, self.mesh, self._init_params,
                                    n_stages, tc.n_microbatches,
                                    cache_capacity=cache_capacity,
                                    schedule=policy, packed=packed,
-                                   cache_dtype=cache_dtype)
+                                   cache_dtype=cache_dtype, spans=self.spans)
 
     @property
     def compile_count(self) -> int:
@@ -223,14 +279,16 @@ class CachedBackend(FusedBackend):
 
     def __init__(self, cfg, tc, policy, *, n_stages: int, cache_capacity: int,
                  params=None, packed: bool = True,
-                 cache_dtype: str = "native"):
+                 cache_dtype: str = "native", spans=None,
+                 device_profiles=None):
         if cache_capacity < 1:
             raise ValueError(
                 f"CachedBackend needs cache_capacity >= 1 (got "
                 f"{cache_capacity}); use FusedBackend for uncached rounds")
         super().__init__(cfg, tc, policy, n_stages=n_stages, params=params,
                          cache_capacity=cache_capacity, packed=packed,
-                         cache_dtype=cache_dtype)
+                         cache_dtype=cache_dtype, spans=spans,
+                         device_profiles=device_profiles)
 
 
 class PjitBackend:

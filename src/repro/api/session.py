@@ -75,6 +75,7 @@ class RingSession:
                cache_capacity: Optional[int] = None,
                packed: bool = True, cache_dtype: str = "native",
                impl: str = "jnp", params: Optional[Dict[str, Any]] = None,
+               spans: Any = None, device_profiles: Any = None,
                data: Any = None, callbacks: Sequence[Callback] = (),
                log=print) -> "RingSession":
         """Wire a session from names: backend in {'pjit', 'reference',
@@ -90,6 +91,15 @@ class RingSession:
         entry).  ``data=None`` builds the standard synthetic per-client
         datasets exactly as ``launch/train.py`` always did, so session runs
         are comparable to the seed drivers.
+
+        Heterogeneous rings (ring backends only): ``device_profiles`` — one
+        speed (float) or ``partition.DeviceProfile`` per stage, in ring order
+        — runs the paper's Algorithm-1 speed-weighted block assignment
+        (e.g. speeds ``[1.0, 1.25, 0.5, 0.75]`` over 14 blocks give the
+        paper's 4:5:2:3 spans); ``spans`` pins an explicit layout (sizes
+        list like ``[4, 5, 2, 3]`` or ``[(begin, end)]`` pairs) and wins
+        over profiles.  The layout rides in checkpoints and must match on
+        restore (the stage-stacked Adam moments are laid out per span).
         """
         policy = resolve_policy(policy, tc)
         S = n_stages or tc.n_stages
@@ -97,6 +107,11 @@ class RingSession:
             if backend not in BACKENDS:
                 raise ValueError(f"unknown backend {backend!r}; "
                                  f"known: {sorted(BACKENDS)}")
+            if backend == "pjit" and (spans is not None
+                                      or device_profiles is not None):
+                raise ValueError(
+                    "spans/device_profiles describe the ring's stage layout "
+                    "— they have no meaning for the pjit backend")
             if backend == "pjit":
                 be = PjitBackend(cfg, tc, policy, impl=impl, params=params)
             elif backend == "cached":
@@ -117,13 +132,18 @@ class RingSession:
                         f"or use backend='fused'")
                 be = CachedBackend(cfg, tc, policy, n_stages=S,
                                    cache_capacity=cap, params=params,
-                                   packed=packed, cache_dtype=cache_dtype)
+                                   packed=packed, cache_dtype=cache_dtype,
+                                   spans=spans,
+                                   device_profiles=device_profiles)
             elif backend == "fused":
                 be = FusedBackend(cfg, tc, policy, n_stages=S, params=params,
-                                  packed=packed, cache_dtype=cache_dtype)
+                                  packed=packed, cache_dtype=cache_dtype,
+                                  spans=spans,
+                                  device_profiles=device_profiles)
             else:
                 be = BACKENDS[backend](cfg, tc, policy, n_stages=S,
-                                       params=params)
+                                       params=params, spans=spans,
+                                       device_profiles=device_profiles)
         else:
             be = backend
             # a ready instance already embeds the policy that drives its
@@ -142,10 +162,16 @@ class RingSession:
             data = (PjitDataSource(cfg, tc) if be.kind == "pjit"
                     else RingDataSource(cfg, tc, getattr(be, "S", S),
                                         slots_per_epoch=slots_per_epoch))
+        be_spans = getattr(be, "spans", None)
         create_args = {"backend": be.name, "n_stages": getattr(be, "S", None),
                        "slots_per_epoch": slots_per_epoch,
                        "cache_capacity": cache_capacity, "impl": impl,
-                       "packed": packed, "cache_dtype": cache_dtype}
+                       "packed": packed, "cache_dtype": cache_dtype,
+                       # span layout rides in the checkpoint so restore
+                       # rebuilds the same heterogeneous partition (JSON:
+                       # list of [begin, end] pairs)
+                       "spans": ([list(sp) for sp in be_spans]
+                                 if be_spans is not None else None)}
         return cls(cfg, tc, be, policy, data, callbacks=callbacks,
                    create_args=create_args)
 
@@ -287,9 +313,13 @@ class RingSession:
         if backend is None:
             backend = ex.get("backend", "fused")
         for k in ("n_stages", "slots_per_epoch", "cache_capacity", "impl",
-                  "packed", "cache_dtype"):
+                  "packed", "cache_dtype", "spans"):
             if k in ex and ex[k] is not None:
                 create_kwargs.setdefault(k, ex[k])
+        if backend == "pjit":
+            # a ring checkpoint's span layout means nothing to pjit; let the
+            # format-mismatch check produce the real diagnostic
+            create_kwargs.pop("spans", None)
         sess = cls.create(cfg, tc, backend=backend, policy=policy,
                           **create_kwargs)
         return sess.load(path)

@@ -116,10 +116,18 @@ class ActivationCache:
     int8 scale sidecar) when first allocated — pass the row sharding extended
     with a leading replicated axis, e.g. ``NamedSharding(mesh, P(None,
     'stage'))``.
+
+    ``layout`` (optional, any hashable — the executor passes its span-layout
+    tuple) binds the cached bits to the stage layout that produced them:
+    entries hold STAGE-LOCAL shards of the stage-``F`` boundary activations,
+    so after a repartition the same bytes would be injected at a different
+    block index.  ``set_layout`` flushes the whole cache whenever the layout
+    changes (counted as an invalidation event, like a boundary drop).
     """
 
     def __init__(self, capacity: int, *, dtype: str = "native",
-                 sharding: Optional[Any] = None):
+                 sharding: Optional[Any] = None,
+                 layout: Optional[Any] = None):
         if capacity < 0:
             raise ValueError(f"capacity must be >= 0, got {capacity}")
         if dtype not in CACHE_DTYPES:
@@ -128,6 +136,7 @@ class ActivationCache:
         self.capacity = capacity
         self.dtype = dtype
         self.sharding = sharding
+        self.layout = layout
         self._buf: Optional[Array] = None
         self._scales: Optional[Array] = None
         self._rows: "OrderedDict[Hashable, int]" = OrderedDict()  # key -> row
@@ -268,6 +277,22 @@ class ActivationCache:
         self._rows.move_to_end(key)
         self.hits += 1
         return row
+
+    # ------------------------------------------------------------------
+    def set_layout(self, layout: Any) -> int:
+        """Bind the cache to a (new) stage layout, flushing it on change.
+
+        A span-layout change moves the boundary between frozen trunk and hot
+        region across devices: every held entry was captured as a stage-local
+        shard of the OLD layout's stage-``F`` inputs and can never be valid
+        again — same contract as a boundary drop, whole-cache invalidation.
+        Setting the same layout is a no-op.  Returns the number of entries
+        dropped.
+        """
+        if layout == self.layout:
+            return 0
+        self.layout = layout
+        return self.invalidate()
 
     # ------------------------------------------------------------------
     def invalidate(self) -> int:

@@ -48,6 +48,15 @@ top-down — enforced here and in ``core/unfreeze.py``).  Batches whose shapes
 don't fit the allocated buffer, or rounds without a slot key (streaming data),
 fall back to ``direct``.
 
+Heterogeneous rings (``spans=``): the executor runs any contiguous span
+layout — ``partition.assign_layers`` output for speed-weighted heterogeneous
+meshes (the paper's 4:5:2:3), or the balanced default.  The unfreeze boundary
+aligns DOWN to span edges, the cache binds to the layout
+(``ActivationCache.set_layout`` flushes it on ``repartition``), and
+``measured_tick_ledger`` exposes the scan lengths actually traced per
+``(boundary, mode)`` executable for the simulator-vs-executor differential
+tests (tests/test_partition_exec.py).
+
 Numerics match ``RingTrainer`` exactly (same ``adamw.leaf_update`` math,
 constant lr, no bias correction) — asserted by tests/test_executor.py; the
 cached path matches the uncached fused path — asserted by
@@ -55,7 +64,7 @@ tests/test_actcache.py.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +76,7 @@ from repro.configs.base import ModelConfig, TrainConfig
 from repro.core import actcache
 from repro.core import pipeline as pl
 from repro.core.actcache import ActivationCache
+from repro.core.partition import Span, align_boundary, frozen_stage_count
 from repro.core.unfreeze import UnfreezeSchedule, depth_to_boundary
 from repro.optim import adamw
 
@@ -109,7 +119,9 @@ def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
                      n_stages: int, boundary: int, n_micro: int,
                      on_trace=None, mode: str = "direct",
                      packed: bool = True, cache_dtype: str = "native",
-                     cache_src_dtype: Any = None):
+                     cache_src_dtype: Any = None,
+                     spans: Optional[Sequence[Span]] = None,
+                     tick_record=None):
     """Build the fused round in one of three modes:
 
       direct :  fn(stage_blocks, shared, opt_state, tokens, labels)
@@ -140,23 +152,34 @@ def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
     so ``packed`` silently falls back to the scan there (measured ~9%
     slower otherwise on the 2-device mesh — see BENCH_ring_2dev.json).
 
-    Static per build: (boundary, mode, packed, cache_dtype).  ``on_trace``
-    (if given) is called each time the function body is traced — i.e. once
-    per XLA compilation — which is how tests count executables.  Wrap the
-    result in ``jax.jit(..., donate_argnums=(0, 1, 2))`` (RingExecutor does;
-    the cache buffers are never donated — they outlive the round).
+    ``spans`` selects the stage layout ([(begin, end)] per stage, e.g. the
+    paper's 4:5:2:3 from ``partition.assign_layers``); None is the balanced
+    split.  ``boundary`` must be span-aligned.  ``tick_record(phase, ticks)``
+    (if given) is called at trace time with each tick scan's length — the
+    measured ledger tests/test_partition_exec.py pins against
+    ``pipeline.pipeline_tick_counts``.
+
+    Static per build: (boundary, mode, packed, cache_dtype, spans).
+    ``on_trace`` (if given) is called each time the function body is traced
+    — i.e. once per XLA compilation — which is how tests count executables.
+    Wrap the result in ``jax.jit(..., donate_argnums=(0, 1, 2))``
+    (RingExecutor does; the cache buffers are never donated — they outlive
+    the round).
     """
     assert mode in FUSED_MODES, mode
     S = n_stages
-    lps = cfg.repeats // S
-    assert boundary % lps == 0, f"boundary {boundary} not stage-aligned"
-    F = boundary // lps
+    spans = pl.resolve_spans(cfg.repeats, S, spans)
+    F = frozen_stage_count(spans, boundary)
+    rec = tick_record or (lambda phase, t: None)
     phase_a = pl.ring_phase_a(cfg, n_stages=S, boundary=boundary,
-                              n_micro=n_micro)
-    phase_a_packed = pl.ring_phase_a_packed(cfg, n_stages=S, boundary=boundary,
-                                            n_micro=n_micro)
+                              n_micro=n_micro, spans=spans,
+                              record=lambda t: rec("phase_a", t))
+    phase_a_packed = pl.ring_phase_a_packed(
+        cfg, n_stages=S, boundary=boundary, n_micro=n_micro, spans=spans,
+        record=lambda t: rec("phase_a_packed", t))
     phase_b = pl.ring_phase_b(cfg, n_stages=S, boundary=boundary,
-                              n_micro=n_micro)
+                              n_micro=n_micro, spans=spans,
+                              record=lambda t: rec("phase_b", t))
     lr = jnp.float32(tc.learning_rate)
     # what Phase B received at capture time: compressed entries dequantize
     # back to exactly this dtype (the captured activations' own dtype when
@@ -340,14 +363,23 @@ class RingExecutor:
                  params: Dict[str, Any], n_stages: int, n_micro: int, *,
                  donate: bool = True, cache_capacity: int = 0,
                  schedule: Optional[Any] = None, packed: bool = True,
-                 cache_dtype: str = "native"):
+                 cache_dtype: str = "native",
+                 spans: Optional[Sequence[Span]] = None):
         assert len(cfg.pattern) == 1, "ring executor needs a uniform pattern"
         self.cfg, self.tc, self.mesh = cfg, tc, mesh
         self.S, self.M = n_stages, n_micro
         self.packed = packed
         self.cache_dtype = cache_dtype
-        self.lps = cfg.repeats // n_stages
-        self.stage_blocks, self.shared = pl.stage_stack(params, cfg, n_stages)
+        # ``spans`` makes heterogeneous (uneven, assign_layers-produced)
+        # stage layouts first-class; None is the balanced split — identical
+        # to the historical L/S-per-stage layout when R divides evenly.
+        self.spans = pl.resolve_spans(cfg.repeats, n_stages, spans)
+        # lps only exists for uniform layouts (back-compat for benches/tests
+        # that reason in blocks-per-stage); ragged layouts use self.spans.
+        self.lps = (cfg.repeats // n_stages
+                    if not pl.is_ragged(self.spans) else None)
+        self.stage_blocks, self.shared = pl.stage_stack(params, cfg, n_stages,
+                                                        spans=self.spans)
         self._params_rest = {k: v for k, v in params.items()
                              if k not in ("blocks",)}
         self.opt_state = ring_opt_init(self.stage_blocks, self.shared)
@@ -362,10 +394,15 @@ class RingExecutor:
         if cache_capacity:
             self.cache = ActivationCache(
                 cache_capacity, dtype=cache_dtype,
-                sharding=NamedSharding(mesh, P(None, "stage")))
+                sharding=NamedSharding(mesh, P(None, "stage")),
+                layout=self.spans)
         self._fns: Dict[Tuple[int, str], Any] = {}  # (boundary, mode) -> jit fn
         self.trace_counts: Dict[int, int] = {}      # boundary -> #compilations
         self.mode_trace_counts: Dict[Tuple[int, str], int] = {}
+        # (boundary, mode) -> {phase: scan length} — the scan lengths XLA
+        # actually traced (pipeline._tick_phase reports them); the measured
+        # side of the simulator-vs-executor differential harness.
+        self.tick_scan_lens: Dict[Tuple[int, str], Dict[str, int]] = {}
         self._last_boundary: Optional[int] = None
         self.step = 0
 
@@ -373,7 +410,7 @@ class RingExecutor:
     def boundary_at(self, step: int) -> int:
         depth = self.sched.depth_at(step, self.cfg.n_layers)
         b = depth_to_boundary(self.cfg, depth)
-        return (b // self.lps) * self.lps          # stage-aligned (terminator)
+        return align_boundary(self.spans, b)       # span-aligned (terminator)
 
     def _fn(self, boundary: int, mode: str = "direct"):
         key = (boundary, mode)
@@ -385,6 +422,9 @@ class RingExecutor:
                 self.mode_trace_counts[(b, mo)] = (
                     self.mode_trace_counts.get((b, mo), 0) + 1)
 
+            def tick_rec(phase, t, k=key):
+                self.tick_scan_lens.setdefault(k, {})[phase] = t
+
             src_dt = (self.cache.src_dtype if self.cache is not None
                       else None)
             fused = make_fused_round(self.cfg, self.tc, self.mesh,
@@ -392,10 +432,50 @@ class RingExecutor:
                                      n_micro=self.M, on_trace=bump, mode=mode,
                                      packed=self.packed,
                                      cache_dtype=self.cache_dtype,
-                                     cache_src_dtype=src_dt)
+                                     cache_src_dtype=src_dt,
+                                     spans=self.spans, tick_record=tick_rec)
             donate = (0, 1, 2) if self.donate else ()
             self._fns[key] = jax.jit(fused, donate_argnums=donate)
         return self._fns[key]
+
+    def measured_tick_ledger(self, boundary: int, mode: str = "direct"
+                             ) -> Dict[str, int]:
+        """Per-round tick totals from the scan lengths actually traced into
+        the (boundary, mode) executable — the measured half of the
+        simulator-vs-executor differential harness.  Matches the key schema
+        of ``pipeline.pipeline_tick_counts`` so tests can compare directly.
+
+        The executable must have been built (one round run, or ``_fn``
+        called) — raises KeyError otherwise.
+        """
+        if (boundary, mode) not in self._fns:
+            raise KeyError(
+                f"no ({boundary}, {mode!r}) executable built yet — run a "
+                f"round at that boundary first")
+        rec = self.tick_scan_lens.get((boundary, mode), {})
+        S, M = self.S, self.M
+        F = frozen_stage_count(self.spans, boundary)
+        tb = rec.get("phase_b")
+        assert tb is not None, (boundary, mode, rec)
+        if "phase_a_packed" in rec:
+            a_round = rec["phase_a_packed"]          # one conveyor per round
+            a_per_owner = 0                          # hoisted out of the scan
+        elif "phase_a" in rec:
+            a_round = S * rec["phase_a"]             # traced once, scanned S x
+            a_per_owner = rec["phase_a"]
+        else:                                        # cached mode or F == 0
+            a_round = 0
+            a_per_owner = 0
+        saved = (S * (M + F - 1) - a_round
+                 if "phase_a_packed" in rec and F > 0 else 0)
+        return {
+            "fwd_ticks": a_per_owner + tb,
+            "bwd_ticks": tb,                         # grad reverses the scan
+            "frozen_stages": F,
+            "hot_stages": S - F,
+            "phase_a_round_ticks": a_round,
+            "phase_a_saved_ticks": saved,
+        }
 
     @property
     def n_executables(self) -> int:
@@ -486,6 +566,43 @@ class RingExecutor:
         return {k: scalarize(v) for k, v in m.items()}
 
     # ------------------------------------------------------------------
+    def repartition(self, spans: Sequence[Span]) -> None:
+        """Switch to a new span layout mid-run (the elastic-membership /
+        re-profiling hook): restacks the live params AND Adam moments into
+        the new padded layout, drops every built executable (the layout is
+        static per build), flushes the activation cache (its entries' stage-F
+        location is layout-dependent — ``ActivationCache.set_layout``), and
+        re-seeds the monotone-boundary check (alignment granularity changed,
+        so the span-aligned boundary may legitimately move up toward the raw
+        schedule value).
+        """
+        new = pl.resolve_spans(self.cfg.repeats, self.S, spans)
+        if new == self.spans:
+            return
+        old = self.spans
+        params = self.export_params()                # flat [R, ...] canonical
+        m_ad = pl.unstack_entry(self.opt_state["m"]["adapter"], old)
+        v_ad = pl.unstack_entry(self.opt_state["v"]["adapter"], old)
+        self.spans = new
+        self.lps = (self.cfg.repeats // self.S
+                    if not pl.is_ragged(new) else None)
+        self.stage_blocks, self.shared = pl.stage_stack(
+            params, self.cfg, self.S, spans=new)
+        self._params_rest = {k: v for k, v in params.items()
+                             if k != "blocks"}
+        self.opt_state = {
+            **self.opt_state,
+            "m": {**self.opt_state["m"],
+                  "adapter": pl.stack_entry(m_ad, new)},
+            "v": {**self.opt_state["v"],
+                  "adapter": pl.stack_entry(v_ad, new)},
+        }
+        self._fns.clear()
+        if self.cache is not None:
+            self.cache.set_layout(new)
+        self._last_boundary = None
+
+    # ------------------------------------------------------------------
     def export_params(self) -> Dict[str, Any]:
         return pl.unstack(self.stage_blocks, self.cfg, self._params_rest,
-                          self.shared)
+                          self.shared, spans=self.spans)

@@ -10,7 +10,9 @@ optimal for contiguous partitions with monotone per-device costs.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import Iterable, List, Optional, Sequence, Tuple, Union
+
+Span = Tuple[int, int]
 
 
 @dataclass(frozen=True)
@@ -69,7 +71,117 @@ def assign_layers(layer_costs: Sequence[float], layer_mem_mb: Sequence[float],
 
 
 def uniform_assignment(n_blocks: int, n_stages: int) -> List[Tuple[int, int]]:
-    """Even split used by the SPMD shard_map pipeline (requires divisibility)."""
-    assert n_blocks % n_stages == 0, (n_blocks, n_stages)
-    per = n_blocks // n_stages
-    return [(i * per, (i + 1) * per) for i in range(n_stages)]
+    """Balanced contiguous split used as the default stage layout.
+
+    When ``n_blocks`` divides evenly this is the classic ``L/S``-per-stage
+    split; otherwise it falls back to the most balanced ragged split (the
+    first ``n_blocks % n_stages`` stages take one extra block) instead of
+    crashing — the ragged-span pipeline executes either layout.
+    """
+    assert 0 < n_stages <= n_blocks, (n_blocks, n_stages)
+    base, rem = divmod(n_blocks, n_stages)
+    spans, i = [], 0
+    for u in range(n_stages):
+        j = i + base + (1 if u < rem else 0)
+        spans.append((i, j))
+        i = j
+    return spans
+
+
+# ---------------------------------------------------------------------------
+# Span-layout helpers (shared by pipeline / executor / simulator / tests)
+# ---------------------------------------------------------------------------
+
+
+def normalize_spans(spans: Union[Sequence[Span], Sequence[int]],
+                    n_blocks: Optional[int] = None) -> Tuple[Span, ...]:
+    """Canonicalize a span layout: accepts [(begin, end), ...] or a sizes
+    list like [4, 5, 2, 3]; validates contiguity/coverage.  Returns a tuple
+    of (begin, end) pairs (hashable — the activation cache's layout key)."""
+    spans = list(spans)
+    assert spans, "empty span layout"
+    if spans and not isinstance(spans[0], (tuple, list)):
+        sizes = [int(s) for s in spans]
+        out, i = [], 0
+        for sz in sizes:
+            out.append((i, i + sz))
+            i += sz
+        spans = out
+    spans = [(int(b), int(e)) for b, e in spans]
+    prev = 0
+    for b, e in spans:
+        if b != prev or e <= b:
+            raise ValueError(
+                f"span layout {spans} is not a contiguous cover: span "
+                f"({b}, {e}) should start at {prev} and be non-empty")
+        prev = e
+    if n_blocks is not None and prev != n_blocks:
+        raise ValueError(
+            f"span layout {spans} covers {prev} blocks, model has {n_blocks}")
+    return tuple(spans)
+
+
+def span_sizes(spans: Sequence[Span]) -> Tuple[int, ...]:
+    return tuple(e - b for b, e in spans)
+
+
+def span_boundaries(spans: Sequence[Span]) -> Tuple[int, ...]:
+    """Cumulative block counts [0, |s0|, |s0|+|s1|, ..., n_blocks] — the only
+    boundaries (frozen blocks from the bottom) a given layout can realize."""
+    return (0,) + tuple(e for _, e in spans)
+
+
+def frozen_stage_count(spans: Sequence[Span], boundary: int) -> int:
+    """Number of fully-frozen stages for a span-ALIGNED boundary.
+
+    Raises when the boundary does not fall on a span edge — callers align
+    first via :func:`align_boundary`.
+    """
+    cum = span_boundaries(spans)
+    if boundary not in cum:
+        raise ValueError(
+            f"boundary {boundary} is not span-aligned for layout "
+            f"{list(spans)} (alignable boundaries: {list(cum)})")
+    return cum.index(boundary)
+
+
+def align_boundary(spans: Sequence[Span], boundary: int) -> int:
+    """Round a raw (block-granular) boundary DOWN to the nearest span edge —
+    fewer frozen blocks, never more (the terminator device owns the span the
+    raw boundary falls inside, so its whole span stays hot)."""
+    return max(c for c in span_boundaries(spans) if c <= boundary)
+
+
+def spans_from_profiles(n_blocks: int, devices: Sequence[DeviceProfile], *,
+                        layer_costs: Optional[Sequence[float]] = None,
+                        layer_mem_mb: Optional[Sequence[float]] = None,
+                        ) -> Tuple[Span, ...]:
+    """Speed-weighted span layout for a heterogeneous ring (Algorithm 1).
+
+    Default per-block costs are uniform (1.0) and memory unconstrained —
+    the assignment then minimizes ``max_u span_u / speed_u``, which is the
+    paper's 4:5:2:3 example for speeds skewed toward the middle devices.
+    """
+    costs = list(layer_costs) if layer_costs is not None else [1.0] * n_blocks
+    mems = (list(layer_mem_mb) if layer_mem_mb is not None
+            else [0.0] * n_blocks)
+    assert len(costs) == len(mems) == n_blocks
+    return normalize_spans(assign_layers(costs, mems, devices), n_blocks)
+
+
+def parse_device_profiles(speeds: Iterable[Union[float, DeviceProfile]],
+                          ) -> List[DeviceProfile]:
+    """Coerce a mixed list of speeds / profiles (e.g. the CLI's
+    ``--device-speeds 1.0,0.5,2.0,1.0``) into DeviceProfile objects."""
+    out = []
+    for s in speeds:
+        if isinstance(s, DeviceProfile):
+            out.append(s)
+        else:
+            sp = float(s)
+            if sp <= 0:
+                raise ValueError(f"device speed must be > 0, got {sp}")
+            out.append(DeviceProfile(compute_speed=sp, memory_mb=float("inf")))
+    if not out:
+        raise ValueError("empty device-profile list")
+    return out

@@ -74,23 +74,40 @@ Phase-A skip (the frozen-trunk activation cache, ``core/actcache.py``):
   batch slots) for streaming or non-repeating data — a slot that is never
   revisited only pays the capture write without ever hitting.
 
+Heterogeneous (ragged) span layouts:
+
+  The paper's coordinator assigns *uneven* contiguous block spans to
+  heterogeneous devices (Algorithm 1's 4:5:2:3 example).  Every builder here
+  takes ``spans=`` ([(begin, end)] per stage, ``partition.assign_layers``
+  output plugs in directly): stage stacks are padded to ``max_span`` with a
+  per-stage validity mask (padding rows are clamped duplicates whose
+  applications are masked out of the residual stream), so the tick pipeline
+  stays ONE traced ``lax.scan`` under SPMD — each stage ticks in lockstep
+  applying exactly its own span.  Boundaries must fall on span edges
+  (``partition.align_boundary`` rounds down).  Uniform layouts
+  (``spans=None``) keep the historical unmasked fast path bit-for-bit.
+
 SPMD adaptation (DESIGN.md §6): per-device *program* asymmetry is impossible under
 SPMD, so the paper's per-device savings appear as globally shorter backward tick
 scans and absent residual stashes for phase A, uniform across devices. The
 discrete-event simulator (core/simulator.py) models the true MPMD overlap
-(``scheme='ringada_cached'`` models the cached steady state).
+(``scheme='ringada_cached'`` models the cached steady state;
+``spmd_tick_round`` predicts the executor's tick ledger for any span layout).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
 from repro.configs.base import ModelConfig
+from repro.core.partition import (Span, frozen_stage_count, normalize_spans,
+                                  span_sizes, uniform_assignment)
 from repro.models import transformer as tfm
 from repro.models.blocks import BlockCtx, apply_block
 
@@ -98,34 +115,109 @@ Array = jax.Array
 
 
 # ---------------------------------------------------------------------------
-# Stage-stacked parameters
+# Stage-stacked parameters (uniform OR ragged span layouts)
 # ---------------------------------------------------------------------------
 
 
-def stage_stack(params: Dict[str, Any], cfg: ModelConfig, n_stages: int
+def resolve_spans(n_blocks: int, n_stages: int,
+                  spans: Optional[Sequence[Span]] = None) -> Tuple[Span, ...]:
+    """Canonical span layout: the given one (validated against the model) or
+    the balanced default.  ``assign_layers`` output plugs in directly."""
+    if spans is None:
+        spans = uniform_assignment(n_blocks, n_stages)
+    spans = normalize_spans(spans, n_blocks)
+    if len(spans) != n_stages:
+        raise ValueError(
+            f"span layout {list(spans)} has {len(spans)} stages, mesh has "
+            f"{n_stages}")
+    return spans
+
+
+def span_maps(spans: Sequence[Span]) -> Tuple[np.ndarray, np.ndarray,
+                                              np.ndarray, np.ndarray]:
+    """Static index maps between the flat [R, ...] block stack and the padded
+    [S, max_span, ...] stage stack:
+
+      stack_idx [S, max_span] — global block index feeding stage row (u, j);
+        padding rows clamp to the stage's last real block (real weights, so
+        masked-out applications can never produce NaNs),
+      valid     [S, max_span] — True where row (u, j) holds a real block,
+      stage_of  [R]           — owning stage of global block r,
+      slot_of   [R]           — row of block r inside its stage's stack.
+    """
+    sizes = span_sizes(spans)
+    S, mx = len(spans), max(sizes)
+    R = spans[-1][1]
+    stack_idx = np.zeros((S, mx), np.int32)
+    valid = np.zeros((S, mx), bool)
+    stage_of = np.zeros(R, np.int32)
+    slot_of = np.zeros(R, np.int32)
+    for u, (b, e) in enumerate(spans):
+        n = e - b
+        stack_idx[u, :n] = np.arange(b, e)
+        stack_idx[u, n:] = e - 1
+        valid[u, :n] = True
+        stage_of[b:e] = u
+        slot_of[b:e] = np.arange(n)
+    return stack_idx, valid, stage_of, slot_of
+
+
+def is_ragged(spans: Sequence[Span]) -> bool:
+    return len(set(span_sizes(spans))) > 1
+
+
+def stack_entry(entry: Any, spans: Sequence[Span]) -> Any:
+    """Flat block-entry tree (leaves [R, C, ...]) -> padded stage stack
+    (leaves [S, max_span, C, ...]).  Uniform layouts keep the original
+    zero-copy reshape; ragged layouts gather through ``span_maps`` (padding
+    rows duplicate the stage's last block and are masked in the forward)."""
+    S = len(spans)
+    if not is_ragged(spans):
+        lps = span_sizes(spans)[0]
+        return jax.tree.map(
+            lambda x: x.reshape((S, lps) + x.shape[1:]), entry)
+    stack_idx, _, _, _ = span_maps(spans)
+    idx = jnp.asarray(stack_idx)
+    return jax.tree.map(lambda x: x[idx], entry)
+
+
+def unstack_entry(stacked: Any, spans: Sequence[Span]) -> Any:
+    """Inverse of :func:`stack_entry`: padded [S, max_span, C, ...] leaves ->
+    flat [R, C, ...] leaves (padding rows dropped)."""
+    R = spans[-1][1]
+    if not is_ragged(spans):
+        return jax.tree.map(lambda x: x.reshape((R,) + x.shape[2:]), stacked)
+    _, _, stage_of, slot_of = span_maps(spans)
+    u, j = jnp.asarray(stage_of), jnp.asarray(slot_of)
+    return jax.tree.map(lambda x: x[u, j], stacked)
+
+
+def stage_stack(params: Dict[str, Any], cfg: ModelConfig, n_stages: int, *,
+                spans: Optional[Sequence[Span]] = None
                 ) -> Tuple[Any, Dict[str, Any]]:
     """Split params into (stage_blocks, shared).
 
-    stage_blocks: block-stack leaves reshaped [S, R/S, C, ...] (shard on 'stage').
+    stage_blocks: block-stack leaves stacked [S, max_span, C, ...] (shard on
+    'stage'): stage ``u`` holds blocks ``spans[u]``, rows past its span are
+    clamped duplicates masked out of the forward.  ``spans=None`` is the
+    balanced split (the classic [S, R/S, C, ...] when R divides evenly).
     shared: embed / final_norm / head (+meta), replicated on every stage — the
     paper keeps Emb + Hed copies on every client.
     """
     assert len(cfg.pattern) == 1, "ring pipeline requires a uniform layer pattern"
-    R = cfg.repeats
-    assert R % n_stages == 0, (R, n_stages)
-    lps = R // n_stages
-    entry = params["blocks"][0]
-    stage_blocks = jax.tree.map(
-        lambda x: x.reshape((n_stages, lps) + x.shape[1:]), entry)
+    spans = resolve_spans(cfg.repeats, n_stages, spans)
+    stage_blocks = stack_entry(params["blocks"][0], spans)
     shared = {k: v for k, v in params.items() if k != "blocks"}
     return stage_blocks, shared
 
 
 def unstack(stage_blocks, cfg: ModelConfig, params: Dict[str, Any],
-            shared: Dict[str, Any]) -> Dict[str, Any]:
+            shared: Dict[str, Any], *,
+            spans: Optional[Sequence[Span]] = None) -> Dict[str, Any]:
     """Inverse of stage_stack: rebuild the flat [R, C, ...] param tree."""
-    R = cfg.repeats
-    entry = jax.tree.map(lambda x: x.reshape((R,) + x.shape[2:]), stage_blocks)
+    n_stages = len(jax.tree.leaves(stage_blocks)[0])
+    spans = resolve_spans(cfg.repeats, n_stages, spans)
+    entry = unstack_entry(stage_blocks, spans)
     return {**params, **shared, "blocks": (entry,)}
 
 
@@ -135,31 +227,46 @@ def unstack(stage_blocks, cfg: ModelConfig, params: Dict[str, Any],
 
 
 def _apply_stage_layers(cfg: ModelConfig, stage_params, h: Array,
-                        positions: Array) -> Array:
-    """Apply this stage's local repeats (leaves [Lps, C, ...]) to h [mb, seq, D]."""
+                        positions: Array, valid: Optional[Array] = None
+                        ) -> Array:
+    """Apply this stage's local blocks (leaves [max_span, C, ...]) to h
+    [mb, seq, D].  ``valid`` ([max_span] bool, stage-local) masks padding
+    rows of a ragged span layout: an invalid row's application is discarded
+    (the residual stream passes through unchanged), so every stage scans the
+    same ``max_span`` slots under SPMD while computing exactly its own span.
+    ``valid=None`` (uniform layouts) keeps the unmasked fast path."""
     ctx = BlockCtx(cfg=cfg, mode="seq", positions=positions, causal=True,
                    q_chunk=tfm.pick_chunk(h.shape[1]))
     kind = cfg.pattern[0][0]
 
-    def body(carry, p_slice):
+    def body(carry, xs):
+        p_slice = xs if valid is None else xs[0]
+
         def inner(c2, p2):
             h3, _, _ = apply_block(kind, cfg, p2, c2, ctx, None)
             return h3, None
 
         h2, _ = lax.scan(inner, carry, p_slice)
+        if valid is not None:
+            h2 = jnp.where(xs[1], h2, carry)
         return h2, None
 
-    h, _ = lax.scan(body, h, stage_params)
+    xs = stage_params if valid is None else (stage_params, valid)
+    h, _ = lax.scan(body, h, xs)
     return h
 
 
 def _tick_phase(cfg: ModelConfig, s: Array, pos: Array, fwd_perm, n_micro: int,
-                blocks_slice, h_inject: Array, first_stage, depth: int) -> Array:
+                blocks_slice, h_inject: Array, first_stage, depth: int,
+                valid: Optional[Array] = None, record=None) -> Array:
     """Tick pipeline over stages [first, first+depth); returns the
     [M, mb, seq, D] outputs emitted by stage first+depth-1 (stage-local:
-    only meaningful on that stage)."""
+    only meaningful on that stage).  ``record`` (if given) is called with the
+    scan length at trace time — the executor's measured tick ledger."""
     M = n_micro
     T = M + depth - 1
+    if record is not None:
+        record(T)
     rel = s - first_stage
 
     def tick(carry, t):
@@ -167,7 +274,7 @@ def _tick_phase(cfg: ModelConfig, s: Array, pos: Array, fwd_perm, n_micro: int,
         inject = (rel == 0) & (t < M)
         incoming = jnp.where(inject, h_inject[jnp.minimum(t, M - 1)], buf)
         active = (rel >= 0) & (rel < depth) & (t - rel >= 0) & (t - rel < M)
-        out = _apply_stage_layers(cfg, blocks_slice, incoming, pos)
+        out = _apply_stage_layers(cfg, blocks_slice, incoming, pos, valid)
         out = jnp.where(active, out, incoming)
         nxt = lax.ppermute(out, "stage", fwd_perm)
         return nxt, out
@@ -182,27 +289,37 @@ def _tick_phase(cfg: ModelConfig, s: Array, pos: Array, fwd_perm, n_micro: int,
 # ---------------------------------------------------------------------------
 
 
+def _stage_valid(spans, s) -> Optional[Array]:
+    """Stage-local [max_span] validity row for ragged layouts (None when the
+    layout is uniform — the unmasked fast path stays bit-identical)."""
+    if not is_ragged(spans):
+        return None
+    _, valid, _, _ = span_maps(spans)
+    return jnp.asarray(valid)[s]
+
+
 def make_ring_round(cfg: ModelConfig, mesh: Mesh, *, n_stages: int, owner: int,
-                    boundary: int, n_micro: int):
+                    boundary: int, n_micro: int,
+                    spans: Optional[Sequence[Span]] = None):
     """Build ``loss_fn(stage_blocks, shared, tokens, labels) -> loss``.
 
-    Static per build: (owner, boundary). boundary must be stage-aligned.
+    Static per build: (owner, boundary, spans). boundary must be span-aligned
+    (fall on a stage edge of ``spans``; stage-aligned in the uniform case).
     Global input shapes:
-      stage_blocks leaves [S, lps, C, ...]   sharded P('stage')
+      stage_blocks leaves [S, max_span, C, ...] sharded P('stage')
       shared                                  replicated P()
       tokens / labels [S, M, mb, seq]         sharded P('stage')  (per-client data)
     """
-    R = cfg.repeats
-    lps = R // n_stages
-    assert boundary % lps == 0, f"boundary {boundary} not stage-aligned (lps={lps})"
-    F = boundary // lps
+    spans = resolve_spans(cfg.repeats, n_stages, spans)
+    F = frozen_stage_count(spans, boundary)
     S_hot = n_stages - F
     M = n_micro
     fwd_perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
 
     def round_fn(stage_blocks, shared, tokens, labels):
         s = lax.axis_index("stage")
-        my_blocks = jax.tree.map(lambda x: x[0], stage_blocks)    # [lps, C, ...]
+        my_blocks = jax.tree.map(lambda x: x[0], stage_blocks)  # [max_span,...]
+        valid = _stage_valid(spans, s)
         my_tokens = tokens[0]                                     # [M, mb, seq]
         my_labels = labels[0]
         mb, seq = my_tokens.shape[1], my_tokens.shape[2]
@@ -214,7 +331,8 @@ def make_ring_round(cfg: ModelConfig, mesh: Mesh, *, n_stages: int, owner: int,
         emb_at0 = lax.ppermute(emb_all, "stage", shift0)
 
         phase = lambda blocks_slice, h_inject, first, depth: _tick_phase(
-            cfg, s, pos, fwd_perm, M, blocks_slice, h_inject, first, depth)
+            cfg, s, pos, fwd_perm, M, blocks_slice, h_inject, first, depth,
+            valid)
 
         # 2. Phase A (forward-only streaming, no autodiff possible by construction)
         if F > 0:
@@ -246,11 +364,13 @@ def make_ring_round(cfg: ModelConfig, mesh: Mesh, *, n_stages: int, owner: int,
 
 
 def make_ring_train_round(cfg: ModelConfig, mesh: Mesh, *, n_stages: int,
-                          owner: int, boundary: int, n_micro: int):
+                          owner: int, boundary: int, n_micro: int,
+                          spans: Optional[Sequence[Span]] = None):
     """Returns fn(stage_blocks, shared, tokens, labels) ->
-    (loss, (adapter_grads [S,lps,C,...] stage-local, head_grads replicated))."""
+    (loss, (adapter_grads [S,max_span,C,...] stage-local, head_grads
+    replicated))."""
     loss_fn = make_ring_round(cfg, mesh, n_stages=n_stages, owner=owner,
-                              boundary=boundary, n_micro=n_micro)
+                              boundary=boundary, n_micro=n_micro, spans=spans)
 
     def train_round(stage_blocks, shared, tokens, labels):
         def wrapped(adapters, head_p):
@@ -282,14 +402,17 @@ def gather_embeddings(cfg: ModelConfig, shared: Dict[str, Any],
     return lax.all_gather(emb_all, "stage")
 
 
-def _ring_geometry(cfg: ModelConfig, n_stages: int, boundary: int):
-    lps = cfg.repeats // n_stages
-    assert boundary % lps == 0, f"boundary {boundary} not stage-aligned (lps={lps})"
-    return lps, boundary // lps
+def _ring_geometry(cfg: ModelConfig, n_stages: int, boundary: int,
+                   spans: Optional[Sequence[Span]] = None
+                   ) -> Tuple[Tuple[Span, ...], int]:
+    """(canonical spans, frozen-stage count F) for a span-aligned boundary."""
+    spans = resolve_spans(cfg.repeats, n_stages, spans)
+    return spans, frozen_stage_count(spans, boundary)
 
 
 def ring_phase_a(cfg: ModelConfig, *, n_stages: int, boundary: int,
-                 n_micro: int):
+                 n_micro: int, spans: Optional[Sequence[Span]] = None,
+                 record=None):
     """Phase A of the local round: embeddings -> stage-``F`` boundary inputs.
 
     Returns ``fn(owner, my_blocks, emb_g) -> h_B`` ([M, mb, seq, D]
@@ -300,11 +423,12 @@ def ring_phase_a(cfg: ModelConfig, *, n_stages: int, boundary: int,
     what makes ``h_B`` cacheable across rounds (see module docstring).
     """
     S = n_stages
-    _, F = _ring_geometry(cfg, n_stages, boundary)
+    spans, F = _ring_geometry(cfg, n_stages, boundary, spans)
     fwd_perm = [(i, (i + 1) % S) for i in range(S)]
 
     def phase_a(owner, my_blocks, emb_g):
         s = lax.axis_index("stage")
+        valid = _stage_valid(spans, s)
         seq = emb_g.shape[3]
         mb = emb_g.shape[2]
         pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (mb, seq))
@@ -315,7 +439,8 @@ def ring_phase_a(cfg: ModelConfig, *, n_stages: int, boundary: int,
         if F > 0:
             outs_A = _tick_phase(cfg, s, pos, fwd_perm, n_micro,
                                  lax.stop_gradient(my_blocks),
-                                 lax.stop_gradient(emb_at0), 0, F)
+                                 lax.stop_gradient(emb_at0), 0, F,
+                                 valid, record)
             outs_A = lax.stop_gradient(outs_A)
             h_B = lax.ppermute(outs_A, "stage", fwd_perm)
         else:
@@ -326,7 +451,8 @@ def ring_phase_a(cfg: ModelConfig, *, n_stages: int, boundary: int,
 
 
 def ring_phase_a_packed(cfg: ModelConfig, *, n_stages: int, boundary: int,
-                        n_micro: int):
+                        n_micro: int, spans: Optional[Sequence[Span]] = None,
+                        record=None):
     """Packed-conveyor Phase A: ALL owners' boundary inputs in one pipeline.
 
     The per-owner ``ring_phase_a`` runs S independent ``M + F - 1``-tick
@@ -350,12 +476,13 @@ def ring_phase_a_packed(cfg: ModelConfig, *, n_stages: int, boundary: int,
     scan, and capture mode writes the whole stack to the cache in one pass.
     """
     S = n_stages
-    _, F = _ring_geometry(cfg, n_stages, boundary)
+    spans, F = _ring_geometry(cfg, n_stages, boundary, spans)
     M = n_micro
     fwd_perm = [(i, (i + 1) % S) for i in range(S)]
 
     def phase_a_packed(my_blocks, emb_g):
         s = lax.axis_index("stage")
+        valid = _stage_valid(spans, s)
         seq = emb_g.shape[3]
         mb = emb_g.shape[2]
         pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (mb, seq))
@@ -370,7 +497,8 @@ def ring_phase_a_packed(cfg: ModelConfig, *, n_stages: int, boundary: int,
         if F > 0:
             outs = _tick_phase(cfg, s, pos, fwd_perm, S * M,
                                lax.stop_gradient(my_blocks),
-                               lax.stop_gradient(inject), 0, F)
+                               lax.stop_gradient(inject), 0, F,
+                               valid, record)
             outs = lax.stop_gradient(outs)
             h = lax.ppermute(outs, "stage", fwd_perm)      # stage F-1 -> F
         else:
@@ -381,7 +509,8 @@ def ring_phase_a_packed(cfg: ModelConfig, *, n_stages: int, boundary: int,
 
 
 def ring_phase_b(cfg: ModelConfig, *, n_stages: int, boundary: int,
-                 n_micro: int):
+                 n_micro: int, spans: Optional[Sequence[Span]] = None,
+                 record=None):
     """Phase B of the local round: stage-``F`` inputs -> local masked loss.
 
     Returns ``fn(owner, my_blocks, shared, h_B, my_labels) -> local_loss``.
@@ -392,7 +521,7 @@ def ring_phase_b(cfg: ModelConfig, *, n_stages: int, boundary: int,
     nothing Phase A reads changes while the boundary holds (differently-fused
     executables may still differ in float ulps; tests pin allclose).
     """
-    _, F = _ring_geometry(cfg, n_stages, boundary)
+    spans, F = _ring_geometry(cfg, n_stages, boundary, spans)
     S = n_stages
     S_hot = S - F
     M = n_micro
@@ -403,11 +532,13 @@ def ring_phase_b(cfg: ModelConfig, *, n_stages: int, boundary: int,
 
     def phase_b(owner, my_blocks, shared, h_B, my_labels):
         s = lax.axis_index("stage")
+        valid = _stage_valid(spans, s)
         mb, seq = my_labels.shape[1], my_labels.shape[2]
         pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (mb, seq))
 
         # hot 1F1B pipeline; grad => reverse ticks, stops at stage F
-        outs_B = _tick_phase(cfg, s, pos, fwd_perm, M, my_blocks, h_B, F, S_hot)
+        outs_B = _tick_phase(cfg, s, pos, fwd_perm, M, my_blocks, h_B, F,
+                             S_hot, valid, record)
 
         # last stage -> owner: switch over the stacked static tables
         finals = lax.switch(
@@ -425,7 +556,7 @@ def ring_phase_b(cfg: ModelConfig, *, n_stages: int, boundary: int,
 
 
 def ring_round_local(cfg: ModelConfig, *, n_stages: int, boundary: int,
-                     n_micro: int):
+                     n_micro: int, spans: Optional[Sequence[Span]] = None):
     """Local (per-shard) RingAda round with a **traced** owner.
 
     Returns ``fn(owner, my_blocks, shared, emb_g, my_labels) -> local_loss``
@@ -452,9 +583,9 @@ def ring_round_local(cfg: ModelConfig, *, n_stages: int, boundary: int,
     the halves directly so it can capture / reuse the Phase-A output).
     """
     phase_a = ring_phase_a(cfg, n_stages=n_stages, boundary=boundary,
-                           n_micro=n_micro)
+                           n_micro=n_micro, spans=spans)
     phase_b = ring_phase_b(cfg, n_stages=n_stages, boundary=boundary,
-                           n_micro=n_micro)
+                           n_micro=n_micro, spans=spans)
 
     def local_fn(owner, my_blocks, shared, emb_g, my_labels):
         h_B = phase_a(owner, my_blocks, emb_g)
@@ -463,8 +594,10 @@ def ring_round_local(cfg: ModelConfig, *, n_stages: int, boundary: int,
     return local_fn
 
 
-def pipeline_tick_counts(n_stages: int, n_micro: int, boundary: int, lps: int,
-                         *, cached: bool = False, packed: bool = False
+def pipeline_tick_counts(n_stages: int, n_micro: int, boundary: int,
+                         lps: Optional[int] = None, *, cached: bool = False,
+                         packed: bool = False,
+                         spans: Optional[Sequence[Span]] = None
                          ) -> Dict[str, int]:
     """Analytic tick counts (used by tests and the §Perf log).
 
@@ -483,8 +616,21 @@ def pipeline_tick_counts(n_stages: int, n_micro: int, boundary: int, lps: int,
     round's Phase-A conveyor length and ``phase_a_saved_ticks`` the packed
     scheme's per-round saving — both pinned against the discrete-event
     simulator in tests/test_simulator.py.
+
+    Pass either ``lps`` (uniform layouts: ``F = boundary // lps``) or
+    ``spans`` (ragged layouts: ``F`` = frozen stages of the span-aligned
+    boundary).  Tick counts are in STAGE ticks — under SPMD every stage's
+    tick applies ``max_span`` block slots (padding masked), so the counts
+    are layout-shape-independent given ``F``; tests/test_partition_exec.py
+    pins them against the executor's measured scan lengths per layout.
     """
-    F = boundary // lps
+    if spans is not None:
+        assert lps is None or lps * n_stages == normalize_spans(spans)[-1][1], \
+            "pass lps or spans, not disagreeing both"
+        F = frozen_stage_count(normalize_spans(spans), boundary)
+    else:
+        assert lps is not None, "pass lps (uniform) or spans (ragged)"
+        F = boundary // lps
     S_hot = n_stages - F
     phase_a = 0 if (cached or packed or F == 0) else n_micro + F - 1
     if cached or F == 0:

@@ -21,7 +21,7 @@ Semantics (both drivers):
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +29,7 @@ from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.core import pipeline as pl
+from repro.core.partition import Span, align_boundary, frozen_stage_count
 from repro.core.unfreeze import UnfreezeSchedule, depth_to_boundary
 from repro.optim import adamw
 
@@ -45,12 +46,15 @@ class RingTrainer:
 
     def __init__(self, cfg: ModelConfig, tc: TrainConfig, mesh: Mesh,
                  params: Dict[str, Any], n_stages: int, n_micro: int, *,
-                 schedule=None):
+                 schedule=None, spans: Optional[Sequence[Span]] = None):
         assert len(cfg.pattern) == 1, "ring trainer needs a uniform pattern"
         self.cfg, self.tc, self.mesh = cfg, tc, mesh
         self.S, self.M = n_stages, n_micro
-        self.lps = cfg.repeats // n_stages
-        self.stage_blocks, self.shared = pl.stage_stack(params, cfg, n_stages)
+        self.spans = pl.resolve_spans(cfg.repeats, n_stages, spans)
+        self.lps = (cfg.repeats // n_stages
+                    if not pl.is_ragged(self.spans) else None)
+        self.stage_blocks, self.shared = pl.stage_stack(params, cfg, n_stages,
+                                                        spans=self.spans)
         self._params_rest = {k: v for k, v in params.items()
                              if k not in ("blocks",)}
         self.m_ad, self.v_ad = adamw.init_moments(self.stage_blocks["adapter"])
@@ -66,14 +70,14 @@ class RingTrainer:
     def _boundary_at(self, step: int) -> int:
         depth = self.sched.depth_at(step, self.cfg.n_layers)
         b = depth_to_boundary(self.cfg, depth)
-        return (b // self.lps) * self.lps          # stage-aligned (terminator device)
+        return align_boundary(self.spans, b)   # span-aligned (terminator device)
 
     def _fn(self, owner: int, boundary: int):
         key = (owner, boundary)
         if key not in self._round_fns:
             fn = pl.make_ring_train_round(
                 self.cfg, self.mesh, n_stages=self.S, owner=owner,
-                boundary=boundary, n_micro=self.M)
+                boundary=boundary, n_micro=self.M, spans=self.spans)
             self._round_fns[key] = jax.jit(fn)
         return self._round_fns[key]
 
@@ -104,7 +108,7 @@ class RingTrainer:
         loss, (g_ad, g_hd) = fn(self.stage_blocks, self.shared, tokens, labels)
 
         lr = self.tc.learning_rate
-        F = boundary // self.lps
+        F = frozen_stage_count(self.spans, boundary)
         # stage-row mask: frozen stages' adapters never move
         def upd_ad(g, m, v, p):
             stage_ids = jnp.arange(self.S).reshape(
@@ -132,4 +136,4 @@ class RingTrainer:
     # ------------------------------------------------------------------
     def export_params(self) -> Dict[str, Any]:
         return pl.unstack(self.stage_blocks, self.cfg, self._params_rest,
-                          self.shared)
+                          self.shared, spans=self.spans)

@@ -35,7 +35,9 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.partition import DeviceProfile, uniform_assignment
+from repro.core.partition import (DeviceProfile, frozen_stage_count,
+                                  normalize_spans, span_sizes,
+                                  uniform_assignment)
 
 
 @dataclass(frozen=True)
@@ -268,6 +270,53 @@ def simulate_round(scheme: str, sim: SimConfig, layers: Sequence[LayerProfile],
         peak[u] = mem
 
     return SimResult(total, peak, {u: busy[u] for u in range(U)}, bubbles)
+
+
+# ---------------------------------------------------------------------------
+# SPMD tick predictions for arbitrary (uneven) span layouts
+# ---------------------------------------------------------------------------
+
+
+def spmd_tick_round(spans, n_micro: int, boundary: int, *,
+                    packed: bool = False, cached: bool = False,
+                    n_owners: Optional[int] = None) -> Dict[str, int]:
+    """Discrete-event prediction of the SPMD executor's Phase-A round ticks
+    for an arbitrary (possibly uneven) span layout — the simulator half of
+    the simulator-vs-executor differential harness.
+
+    Under SPMD every stage's tick applies ``max_span`` padded block slots in
+    lockstep, so a stage costs ONE tick per microbatch regardless of its span
+    size.  The engine reproduces that by giving each frozen block unit cost
+    and each device ``compute_speed == |its span|`` (stage time = span/span =
+    exactly 1.0 — no float dust), with hot blocks, backwards, the head and
+    links free: the engine's makespan over ``n_owners`` initiator-iterations
+    IS the Phase-A tick count the executor's traced scans must realize
+    (``pipeline_tick_counts(..., spans=...)``'s ``phase_a_round_ticks``:
+    ``S*(M+F-1)`` scanned, ``S*M+F-1`` packed, 0 cached).
+
+    Defined for boundaries with a terminator (``F < S``): RingAda always
+    keeps at least the top block hot (depth >= 1), so the all-frozen
+    degenerate round never executes.
+    """
+    spans = normalize_spans(spans)
+    R, U = spans[-1][1], len(spans)
+    F = frozen_stage_count(spans, boundary)
+    n_owners = U if n_owners is None else n_owners
+    layers = [LayerProfile(fwd_s=1.0 if i < boundary else 0.0, bwd_s=0.0,
+                           act_mb=0.0, weight_mb=0.0, adapter_mb=0.0,
+                           boundary_mb=0.0) for i in range(R)]
+    devices = [DeviceProfile(compute_speed=float(sz), memory_mb=float("inf"))
+               for sz in span_sizes(spans)]
+    scheme = ("ringada_cached" if cached
+              else "ringada_packed" if packed else "ringada")
+    res = simulate_round(scheme, SimConfig(n_layers=R, n_devices=U,
+                                           n_microbatches=n_micro),
+                         layers, devices, unfreeze_depth=R - boundary,
+                         spans=list(spans), n_owners=n_owners)
+    ticks = int(round(res.time_per_round_s))
+    assert abs(res.time_per_round_s - ticks) < 1e-9, res.time_per_round_s
+    return {"phase_a_round_ticks": ticks, "frozen_stages": F,
+            "hot_stages": U - F}
 
 
 # ---------------------------------------------------------------------------

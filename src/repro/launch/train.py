@@ -78,6 +78,7 @@ def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
                slots_per_epoch: Optional[int] = None,
                cache_capacity: Optional[int] = None,
                packed: bool = True, cache_dtype: str = "native",
+               device_speeds: Optional[Any] = None,
                save_path: Optional[str] = None, resume: Optional[str] = None,
                policy: Any = None, log=print) -> Dict[str, Any]:
     """Ring-pipeline training across ``n_stages`` devices — a shell over
@@ -92,6 +93,13 @@ def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
     per-owner scan (the packed conveyor is on by default); ``cache_dtype``
     compresses cache entries ('bf16' halves, 'int8' quarters the bytes per
     entry — see ``core/actcache.py`` for the accuracy tradeoff).
+
+    ``device_speeds`` (one relative speed per stage, ring order — the CLI's
+    ``--device-speeds 1.0,0.5,2.0,1.0``) runs the paper's speed-weighted
+    layer assignment: faster devices get proportionally larger contiguous
+    block spans (Algorithm 1; the 4:5:2:3 example).  The resulting span
+    layout is recorded in ``--save`` checkpoints and restored by
+    ``--resume``.
     """
     if trainer not in ("fused", "reference"):
         raise ValueError(f"trainer must be 'fused' or 'reference', "
@@ -103,9 +111,18 @@ def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
                else (slots_per_epoch or 0))
         backend = "cached" if (slots_per_epoch and cap) else "fused"
     if resume:
-        # the checkpoint records backend/stages/slots/capacity; re-deriving
-        # them from (possibly omitted) CLI flags would silently resume a
-        # slotted cached run as fused+streaming — a different data sequence.
+        if device_speeds is not None:
+            raise ValueError(
+                "--device-speeds cannot be combined with --resume: the span "
+                "layout is part of the checkpointed state (stage-stacked "
+                "Adam moments are laid out per span), so resume always "
+                "restores the saved layout. To repartition, start a fresh "
+                "run with the new speeds, or use RingExecutor.repartition "
+                "programmatically.")
+        # the checkpoint records backend/stages/slots/capacity/spans;
+        # re-deriving them from (possibly omitted) CLI flags would silently
+        # resume a slotted cached run as fused+streaming — a different data
+        # sequence.
         sess = RingSession.restore(resume, cfg, tc, policy=policy, log=log)
         if sess.backend.kind != "ring":
             raise ValueError(
@@ -117,7 +134,11 @@ def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
                                   slots_per_epoch=slots_per_epoch,
                                   cache_capacity=cache_capacity,
                                   packed=packed, cache_dtype=cache_dtype,
+                                  device_profiles=device_speeds,
                                   log=log)
+        if device_speeds is not None:
+            log(f"heterogeneous ring: speeds {list(device_speeds)} -> spans "
+                f"{[list(sp) for sp in sess.backend.spans]}")
     t0 = time.time()
     history = sess.run(rounds, log_every=log_every,
                        callbacks=[LoggingCallback(log, every=log_every)])
@@ -146,6 +167,11 @@ def main() -> None:
     ap.add_argument("--stages", type=int, default=4)
     ap.add_argument("--reduced", action="store_true",
                     help="train the reduced (CPU-sized) variant")
+    ap.add_argument("--layers", type=int, default=None,
+                    help="override the block count (applied after --reduced; "
+                         "must be a multiple of the arch's layers-per-repeat "
+                         "— e.g. 14 runs the paper's 4:5:2:3 heterogeneous "
+                         "example with --device-speeds)")
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--microbatches", type=int, default=8,
@@ -170,6 +196,13 @@ def main() -> None:
                          "'bf16' halves and 'int8' (per-row scales) quarters "
                          "the bytes per entry, fitting 2-4x more slots in "
                          "the same --cache-capacity memory budget")
+    ap.add_argument("--device-speeds", default=None,
+                    help="ring mode: comma-separated relative compute speeds, "
+                         "one per stage in ring order (e.g. "
+                         "'1.0,0.5,2.0,1.0') — runs the paper's "
+                         "speed-weighted layer assignment so faster devices "
+                         "hold larger contiguous block spans (Algorithm 1); "
+                         "default: balanced spans")
     ap.add_argument("--no-packed", action="store_true",
                     help="ring mode: revert Phase A to the per-owner scan "
                          "(S separate M+F-1-tick pipelines per round) "
@@ -188,6 +221,14 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.layers:
+        import dataclasses
+        per = cfg.layers_per_repeat
+        if args.layers % per:
+            raise SystemExit(f"--layers {args.layers} must be a multiple of "
+                             f"{cfg.name}'s layers-per-repeat ({per})")
+        cfg = dataclasses.replace(cfg, n_layers=args.layers,
+                                  repeats=args.layers // per)
     tc = TrainConfig(batch_size=args.batch_size, seq_len=args.seq_len,
                      learning_rate=args.lr, steps=args.steps,
                      unfreeze_interval=args.unfreeze_interval,
@@ -197,6 +238,8 @@ def main() -> None:
                          policy=args.policy, save_path=args.save,
                          resume=args.resume)
     else:
+        speeds = ([float(s) for s in args.device_speeds.split(",")]
+                  if args.device_speeds else None)
         out = train_ring(cfg, tc, rounds=args.rounds, n_stages=args.stages,
                          trainer=args.trainer, policy=args.policy,
                          slots_per_epoch=args.slots_per_epoch or None,
@@ -204,6 +247,7 @@ def main() -> None:
                          else args.cache_capacity,
                          packed=not args.no_packed,
                          cache_dtype=args.cache_dtype,
+                         device_speeds=speeds,
                          save_path=args.save, resume=args.resume)
     print(json.dumps(out["history"][-1], default=float))
 

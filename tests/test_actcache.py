@@ -185,6 +185,46 @@ def test_cache_rejects_unknown_dtype():
         ActivationCache(2, dtype="fp4")
 
 
+def test_cache_span_layout_change_invalidates():
+    """Entries are stage-local shards of a specific span layout: a
+    repartition makes every held entry permanently wrong, so ``set_layout``
+    must flush the whole cache (one invalidation event, like a boundary
+    drop) while keeping the buffer allocation; the SAME layout is a no-op."""
+    layout_a = ((0, 4), (4, 8), (8, 11), (11, 14))
+    layout_b = ((0, 4), (4, 9), (9, 11), (11, 14))      # 4:5:2:3
+    c = ActivationCache(2, layout=layout_a)
+    assert c.layout == layout_a
+    c.put(("s0", 11), _entry(1.0))
+    c.put(("s1", 11), _entry(2.0))
+    assert c.set_layout(layout_a) == 0                  # same layout: no-op
+    assert len(c) == 2 and c.invalidations == 0
+    assert c.set_layout(layout_b) == 2                  # repartition: flush
+    assert c.layout == layout_b
+    assert len(c) == 0 and c.invalidations == 1
+    assert c.index_of(("s0", 11)) is None
+    # buffer survives (same entry shapes): re-capture reuses the allocation
+    assert c.put(("s0", 11), _entry(5.0))
+    assert float(c.buffer[c.index_of(("s0", 11))][0, 0]) == 5.0
+    # an empty cache still tracks the layout without a spurious event
+    d = ActivationCache(2, layout=layout_a)
+    assert d.set_layout(layout_b) == 0
+    assert d.invalidations == 0 and d.layout == layout_b
+
+
+def test_cache_shape_mismatch_bypasses_at_nonuniform_boundary():
+    """Shape-mismatch bypass is orthogonal to the span layout: a ragged
+    layout's cache still refuses (and counts) entries whose shapes don't fit
+    the allocated buffer, at span-aligned (non-lps-multiple) boundaries."""
+    c = ActivationCache(2, layout=((0, 4), (4, 9), (9, 11), (11, 14)))
+    assert c.put(("s0", 9), _entry(1.0))                # boundary 9: 2 stages
+    assert not c.compatible((4, 4))
+    assert not c.put(("s1", 9), _entry(2.0, shape=(4, 4)))
+    assert c.bypasses == 1 and len(c) == 1
+    assert c.index_of(("s0", 9)) is not None            # survivor intact
+    # a boundary key from another span edge shares the buffer fine
+    assert c.put(("s0", 11), _entry(3.0))
+
+
 # ---------------------------------------------------------------------------
 # (a)+(b)+(c): cached executor vs cache-disabled fused executor, 4 devices
 # ---------------------------------------------------------------------------

@@ -136,6 +136,62 @@ def test_assign_layers_contiguous_complete(n, u, seed):
     assert bt <= worst + 1e-9
 
 
+@given(n=st.integers(4, 9), u=st.integers(2, 4), seed=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_assign_layers_memory_feasible_and_bottleneck_optimal(n, u, seed):
+    """Under tight random memory budgets: every span fits its device's
+    budget, and the realized bottleneck equals the brute-force optimum over
+    ALL memory-feasible contiguous partitions (small n — exhaustive)."""
+    import itertools
+    if n < u:
+        return
+    rng = np.random.default_rng(seed)
+    costs = rng.uniform(0.2, 2.0, n).tolist()
+    mems = rng.uniform(0.5, 2.0, n).tolist()
+    devs = [DeviceProfile(compute_speed=float(rng.uniform(0.3, 2.0)),
+                          memory_mb=float(rng.uniform(2.0, 7.0)))
+            for _ in range(u)]
+    best = None
+    for cuts in itertools.combinations(range(1, n), u - 1):
+        edges = (0,) + cuts + (n,)
+        t, ok = 0.0, True
+        for i, dev in enumerate(devs):
+            a, b = edges[i], edges[i + 1]
+            if sum(mems[a:b]) > dev.memory_mb:
+                ok = False
+                break
+            t = max(t, sum(costs[a:b]) / dev.compute_speed)
+        if ok and (best is None or t < best):
+            best = t
+    if best is None:
+        with pytest.raises(ValueError):
+            assign_layers(costs, mems, devs)
+        return
+    spans = assign_layers(costs, mems, devs)
+    for (a, b), dev in zip(spans, devs):
+        assert sum(mems[a:b]) <= dev.memory_mb + 1e-12
+    got = max(sum(costs[a:b]) / dev.compute_speed
+              for (a, b), dev in zip(spans, devs))
+    assert got <= best * (1 + 1e-9) + 1e-12
+
+
+@given(n=st.integers(2, 40), u=st.integers(1, 8))
+@settings(**SETTINGS)
+def test_uniform_assignment_balanced_any_shape(n, u):
+    """The divisibility crash is gone: any (n, u <= n) yields a contiguous
+    cover whose span sizes differ by at most one."""
+    from repro.core.partition import span_sizes, uniform_assignment
+    if u > n:
+        return
+    spans = uniform_assignment(n, u)
+    assert spans[0][0] == 0 and spans[-1][1] == n
+    for (a, b), (c, d) in zip(spans, spans[1:]):
+        assert b == c
+    sizes = span_sizes(spans)
+    assert max(sizes) - min(sizes) <= 1
+    assert sum(sizes) == n
+
+
 # ---------------------------------------------------------------------------
 # Unfreeze schedule
 # ---------------------------------------------------------------------------
