@@ -2,11 +2,15 @@
 
 Runs in ~2 minutes on CPU: builds a reduced StableLM-family model, fine-tunes
 its adapters with the paper's top-down unfreezing schedule (watch ``boundary``
-fall as depth grows), then serves a few greedy tokens from the tuned model.
+fall as depth grows), checkpoints through the canonical persistence surface
+(``session.save(path)``), then serves a few greedy tokens from the tuned
+model.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
 import sys
+import tempfile
 
 sys.path.insert(0, "src")
 
@@ -27,7 +31,16 @@ def main():
                      unfreeze_interval=8,      # paper uses 40; shrunk for demo
                      warmup_steps=2)
     out = train_pjit(cfg, tc, steps=32, log_every=4, scheme="ringada")
-    params = out["params"]
+
+    # the canonical persistence surface: session.save(path) snapshots
+    # params + Adam moments + policy + data cursor (RingSession.restore
+    # resumes it bit-identically); export_params() is the full canonical
+    # tree serving consumes.
+    sess = out["session"]
+    ck = os.path.join(tempfile.mkdtemp(prefix="quickstart_"), "ck")
+    sess.save(ck)
+    print(f"checkpointed to {ck} (resume with RingSession.restore)")
+    params = sess.backend.export_params()
 
     # greedy continuation from the fine-tuned model
     prompt = jnp.array([[7, 42, 199, 23, 5, 77, 3, 11]], dtype=jnp.int32)

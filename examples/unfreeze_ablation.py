@@ -8,11 +8,15 @@ Three sections, all driven through the ``repro.api.RingSession`` facade:
   3. **policy ablation**: the paper's fixed ``IntervalPolicy`` vs the
      adaptive ``LossPlateauPolicy`` (unfreeze the next adapter when the
      smoothed loss plateaus), end-to-end through the same session API, with
-     the per-step boundary trace printed — monotone by contract.
+     the per-step boundary trace printed — monotone by contract, and the
+     final state round-tripped through the canonical persistence surface
+     (``session.save(path)`` / ``RingSession.restore``).
 
     PYTHONPATH=src python examples/unfreeze_ablation.py
 """
+import os
 import sys
+import tempfile
 
 sys.path.insert(0, "src")
 
@@ -84,6 +88,16 @@ def main():
               f"final_depth={h['depth']:2d} wall={h['wall_s']:.1f}s "
               f"compiles={h['compile_count']}")
         print(f"    boundary trace (monotone): {compress_trace(trace)}")
+
+    # canonical persistence: one save(path), one restore — the resumed
+    # session picks up the step counter, boundary, and Adam moments exactly
+    # (tests/test_api_session.py pins the bit-identical continuation).
+    ck = os.path.join(tempfile.mkdtemp(prefix="ablation_"), "ck")
+    sess.save(ck)
+    re = RingSession.restore(ck, cfg, tc, backend="pjit",
+                             policy=policies["plateau(p=2)"])
+    assert re.step_count == sess.step_count
+    print(f"saved + restored at step {re.step_count}")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ from .metrics import (BenchCaptureCallback, Callback, CheckpointCallback,
 from .policies import (ExplicitPolicy, IntervalPolicy, LossPlateauPolicy,
                        resolve_policy)
 from .session import BACKENDS, RingSession
+from .tenants import AdapterStore, TenantGroup
 
 __all__ = [
     "RingSession", "BACKENDS",
@@ -23,4 +24,5 @@ __all__ = [
     "RoundMetrics", "Callback", "LoggingCallback", "CheckpointCallback",
     "BenchCaptureCallback",
     "RingDataSource", "PjitDataSource",
+    "AdapterStore", "TenantGroup",
 ]

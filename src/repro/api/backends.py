@@ -11,10 +11,20 @@ the :class:`~repro.api.session.RingSession` can drive:
         name: str                 # CLI/back-compat name
         steps_per_call: int       # global steps one step() advances
         compile_count: int        # executables built so far
+        @classmethod
+        def build(cls, cfg, tc, policy, *, n_stages, spans, device_profiles,
+                  params, slots_per_epoch, cache_capacity, packed,
+                  cache_dtype, impl, tenants, log) -> Backend
         def step(self, batch) -> dict           # raw metrics (may hold device arrays)
         def state(self) -> dict                 # {"format", "params", "opt"}
         def load_state(self, params, opt, *, step) -> None
         def export_params(self) -> params tree  # canonical [R, ...] layout
+
+    ``build`` is the one constructor the session calls: every backend takes
+    the SAME keyword surface and validates/ignores what it doesn't support
+    (pjit rejects spans, reference/pjit reject tenants > 1, cached requires
+    ``slots_per_epoch``), so ``RingSession.create`` is a single dispatch
+    instead of a per-backend kwarg ladder.
 
 Protocol contracts every adapter honors:
 
@@ -121,6 +131,7 @@ class _RingBackendBase:
     span-layout resolution)."""
 
     kind = "ring"
+    T = 1                                  # tenants (multi-tenant overrides)
 
     def __init__(self, cfg: ModelConfig, tc: TrainConfig, policy, *,
                  n_stages: int, params: Optional[Dict[str, Any]] = None,
@@ -145,12 +156,16 @@ class _RingBackendBase:
     def format(self) -> str:
         """Opt-state layout tag.  Non-default span layouts are part of the
         format: adapter moments are padded [S, max_span, ...] per the layout,
-        so a checkpoint only restores into the same layout."""
+        so a checkpoint only restores into the same layout.  Multi-tenant
+        sessions append ``/T{T}`` — tenant-stacked moments ([S, T, ...]) are
+        a different layout family from single-tenant ones."""
         default = tuple(uniform_assignment(self.cfg.repeats, self.S))
         if self.spans == default:
-            return f"ring/S{self.S}"
-        sig = "-".join(str(n) for n in span_sizes(self.spans))
-        return f"ring/S{self.S}/spans{sig}"
+            tag = f"ring/S{self.S}"
+        else:
+            sig = "-".join(str(n) for n in span_sizes(self.spans))
+            tag = f"ring/S{self.S}/spans{sig}"
+        return tag if self.T == 1 else f"{tag}/T{self.T}"
 
     def export_params(self) -> Dict[str, Any]:
         return self.driver.export_params()
@@ -167,9 +182,24 @@ class _RingBackendBase:
 
     def _restack(self, params: Dict[str, Any]) -> None:
         d = self.driver
+        if hasattr(d, "load_canonical"):
+            # the executor owns its canonical <-> stacked translation (and at
+            # T > 1 the tree is tenant-stacked — only it knows that layout)
+            d.load_canonical(params)
+            return
         d.stage_blocks, d.shared = pl.stage_stack(params, self.cfg, self.S,
                                                   spans=self.spans)
         d._params_rest = {k: v for k, v in params.items() if k != "blocks"}
+
+    def repartition(self, spans) -> None:
+        """Switch the live span layout (executor-backed backends only); the
+        session flushes pending device metrics before calling this."""
+        d = self.driver
+        if not hasattr(d, "repartition"):
+            raise NotImplementedError(
+                f"backend {self.name!r} cannot repartition mid-run")
+        d.repartition(pl.resolve_spans(self.cfg.repeats, self.S, spans))
+        self.spans = d.spans
 
 
 class ReferenceBackend(_RingBackendBase):
@@ -187,6 +217,19 @@ class ReferenceBackend(_RingBackendBase):
         self.driver = RingTrainer(cfg, tc, self.mesh, self._init_params,
                                   n_stages, tc.n_microbatches, schedule=policy,
                                   spans=self.spans)
+
+    @classmethod
+    def build(cls, cfg, tc, policy, *, n_stages, spans=None,
+              device_profiles=None, params=None, slots_per_epoch=None,
+              cache_capacity=None, packed=True, cache_dtype="native",
+              impl="jnp", tenants=1, log=print) -> "ReferenceBackend":
+        if tenants > 1:
+            raise ValueError(
+                "tenants > 1 needs the fused executable (tenant-stacked "
+                "adapters + the T-tenant conveyor) — use backend='fused' or "
+                "'cached'; the reference oracle is single-tenant")
+        return cls(cfg, tc, policy, n_stages=n_stages, params=params,
+                   spans=spans, device_profiles=device_profiles)
 
     @property
     def compile_count(self) -> int:
@@ -225,16 +268,27 @@ class FusedBackend(_RingBackendBase):
     def __init__(self, cfg, tc, policy, *, n_stages: int, params=None,
                  cache_capacity: int = 0, packed: bool = True,
                  cache_dtype: str = "native", spans=None,
-                 device_profiles=None):
+                 device_profiles=None, tenants: int = 1):
         from repro.core.executor import RingExecutor
 
         super().__init__(cfg, tc, policy, n_stages=n_stages, params=params,
                          spans=spans, device_profiles=device_profiles)
+        self.T = tenants
         self.driver = RingExecutor(cfg, tc, self.mesh, self._init_params,
                                    n_stages, tc.n_microbatches,
                                    cache_capacity=cache_capacity,
                                    schedule=policy, packed=packed,
-                                   cache_dtype=cache_dtype, spans=self.spans)
+                                   cache_dtype=cache_dtype, spans=self.spans,
+                                   tenants=tenants)
+
+    @classmethod
+    def build(cls, cfg, tc, policy, *, n_stages, spans=None,
+              device_profiles=None, params=None, slots_per_epoch=None,
+              cache_capacity=None, packed=True, cache_dtype="native",
+              impl="jnp", tenants=1, log=print) -> "FusedBackend":
+        return cls(cfg, tc, policy, n_stages=n_stages, params=params,
+                   packed=packed, cache_dtype=cache_dtype, spans=spans,
+                   device_profiles=device_profiles, tenants=tenants)
 
     @property
     def compile_count(self) -> int:
@@ -248,9 +302,14 @@ class FusedBackend(_RingBackendBase):
                "depth": self._depth_of(m["boundary"]), "step": m["step"],
                "tokens": int(tokens.size),
                "extras": {"losses": m["losses"]}}
+        if self.T > 1:
+            raw["extras"]["tenant_losses"] = m["tenant_losses"]
         if self.driver.cache is not None:
             raw["cache"] = {k: m[k] for k in CACHE_STAT_KEYS}
             raw["cache_hit"] = m["cache_hit"]
+            if self.T > 1:
+                raw["cache"]["tenant_cache_hits"] = m["tenant_cache_hits"]
+                raw["cache"]["tenant_cache_misses"] = m["tenant_cache_misses"]
         return raw
 
     def state(self) -> Dict[str, Any]:
@@ -280,7 +339,7 @@ class CachedBackend(FusedBackend):
     def __init__(self, cfg, tc, policy, *, n_stages: int, cache_capacity: int,
                  params=None, packed: bool = True,
                  cache_dtype: str = "native", spans=None,
-                 device_profiles=None):
+                 device_profiles=None, tenants: int = 1):
         if cache_capacity < 1:
             raise ValueError(
                 f"CachedBackend needs cache_capacity >= 1 (got "
@@ -288,7 +347,35 @@ class CachedBackend(FusedBackend):
         super().__init__(cfg, tc, policy, n_stages=n_stages, params=params,
                          cache_capacity=cache_capacity, packed=packed,
                          cache_dtype=cache_dtype, spans=spans,
-                         device_profiles=device_profiles)
+                         device_profiles=device_profiles, tenants=tenants)
+
+    @classmethod
+    def build(cls, cfg, tc, policy, *, n_stages, spans=None,
+              device_profiles=None, params=None, slots_per_epoch=None,
+              cache_capacity=None, packed=True, cache_dtype="native",
+              impl="jnp", tenants=1, log=print) -> "CachedBackend":
+        if not slots_per_epoch:
+            raise ValueError(
+                "backend='cached' needs slots_per_epoch >= 1: the "
+                "activation cache keys on stable batch slots — with "
+                "streaming draws no key ever repeats. Use "
+                "backend='fused' for non-repeating data.")
+        cap = (cache_capacity if cache_capacity is not None
+               else slots_per_epoch * tenants)
+        # T tenants each own a (tenant, slot, boundary) key per slot, so the
+        # thrash threshold scales with T as well.
+        if 0 < cap < slots_per_epoch * tenants:
+            # round-robin slots + LRU: every slot is evicted before its
+            # revisit — all capture cost, zero hits
+            log(f"WARNING: cache_capacity {cap} < slots_per_epoch "
+                f"{slots_per_epoch}"
+                + (f" x tenants {tenants}" if tenants > 1 else "")
+                + ": the cache will thrash (0% hits, capture overhead every "
+                  "round) — raise the capacity or use backend='fused'")
+        return cls(cfg, tc, policy, n_stages=n_stages, cache_capacity=cap,
+                   params=params, packed=packed, cache_dtype=cache_dtype,
+                   spans=spans, device_profiles=device_profiles,
+                   tenants=tenants)
 
 
 class PjitBackend:
@@ -307,6 +394,21 @@ class PjitBackend:
         self._opt = adamw.init(training.full_trainable(self._params))
         self._fns: Dict[int, Any] = {}      # boundary -> jitted step
         self._step = 0
+
+    @classmethod
+    def build(cls, cfg, tc, policy, *, n_stages=None, spans=None,
+              device_profiles=None, params=None, slots_per_epoch=None,
+              cache_capacity=None, packed=True, cache_dtype="native",
+              impl="jnp", tenants=1, log=print) -> "PjitBackend":
+        if spans is not None or device_profiles is not None:
+            raise ValueError(
+                "spans/device_profiles describe the ring's stage layout "
+                "— they have no meaning for the pjit backend")
+        if tenants > 1:
+            raise ValueError(
+                "tenants > 1 is a ring concept (T adapter sets over one "
+                "frozen ring trunk) — use backend='fused' or 'cached'")
+        return cls(cfg, tc, policy, impl=impl, params=params)
 
     @property
     def format(self) -> str:

@@ -9,40 +9,95 @@ bit-reproducible end to end.
 Batch shapes:
   * ring backends consume ``(slot, tokens, labels)`` triples with
     tokens/labels ``[S, M, mb, seq]`` (slot is None for streaming draws);
+    multi-tenant ring sessions (``tenants=T > 1``) get a tenant axis —
+    ``[S, T, M, mb, seq]`` — one independent per-tenant stream per slice,
+    all sharing ONE slot cursor (a joint round touches the same slot for
+    every tenant, the partitioned cache's key contract);
   * the pjit backend consumes the flat dict batches of ``data.pipeline.Batcher``
     (``{"tokens", "labels"}`` or the QA ``{"tokens", "starts", "ends"}``).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.data.pipeline import (Batcher, RingBatcher, make_client_datasets,
                                  merged)
 
+# per-tenant seed stride: tenant t draws from seed + 7919 * t (a prime far
+# larger than any session count, so tenant streams never collide); tenant 0
+# is the unmodified single-tenant stream — the joint-vs-independent
+# differential oracle depends on both facts.
+TENANT_SEED_STRIDE = 7919
+
 
 class RingDataSource:
     """Per-client ring batches; slot-keyed when ``slots_per_epoch`` is set
-    (the activation cache's key contract)."""
+    (the activation cache's key contract).
+
+    ``tenants=T > 1`` stacks T independent per-tenant streams (tenant t's
+    datasets AND draw order come from ``tc.seed + 7919 * t``) into
+    ``[S, T, M, mb, seq]`` joint batches behind one shared slot cursor.
+    ``tenant=k`` instead builds the SINGLE-tenant source that replays exactly
+    tenant k's slice of the joint stream — the independent half of the
+    differential oracle in tests/test_tenants.py.
+    """
 
     def __init__(self, cfg: ModelConfig, tc: TrainConfig, n_stages: int, *,
-                 slots_per_epoch: Optional[int] = None, n_per_client: int = 128):
-        clients = make_client_datasets(n_stages, vocab=cfg.vocab_size,
-                                       n_per_client=n_per_client,
-                                       seq=tc.seq_len, seed=tc.seed)
-        self.rb = RingBatcher(clients, tc.n_microbatches, tc.batch_size,
-                              seed=tc.seed, slots_per_epoch=slots_per_epoch)
+                 slots_per_epoch: Optional[int] = None,
+                 n_per_client: int = 128, tenants: int = 1,
+                 tenant: Optional[int] = None):
+        if tenant is not None:
+            seeds = [tc.seed + TENANT_SEED_STRIDE * tenant]
+        else:
+            seeds = [tc.seed + TENANT_SEED_STRIDE * t for t in range(tenants)]
+        self.T = len(seeds)
+        self.rbs: List[RingBatcher] = []
+        for seed in seeds:
+            clients = make_client_datasets(n_stages, vocab=cfg.vocab_size,
+                                           n_per_client=n_per_client,
+                                           seq=tc.seq_len, seed=seed)
+            self.rbs.append(RingBatcher(clients, tc.n_microbatches,
+                                        tc.batch_size, seed=seed,
+                                        slots_per_epoch=slots_per_epoch))
+
+    @property
+    def rb(self) -> RingBatcher:          # single-tenant back-compat handle
+        return self.rbs[0]
 
     def next(self) -> Tuple[Optional[int], Any, Any]:
         if self.rb.slots_per_epoch:
-            return self.rb.next_slot()
-        tokens, labels = self.rb.next()
-        return None, tokens, labels
+            draws = [rb.next_slot() for rb in self.rbs]
+            slots = [d[0] for d in draws]
+            assert len(set(slots)) == 1, slots  # one shared slot cursor
+            if self.T == 1:
+                return draws[0]
+            return (slots[0],
+                    np.stack([d[1] for d in draws], axis=1),
+                    np.stack([d[2] for d in draws], axis=1))
+        draws = [rb.next() for rb in self.rbs]
+        if self.T == 1:
+            tokens, labels = draws[0]
+            return None, tokens, labels
+        return (None, np.stack([d[0] for d in draws], axis=1),
+                np.stack([d[1] for d in draws], axis=1))
 
     def state(self) -> Dict[str, Any]:
-        return {"rng": self.rb.rng.bit_generator.state, "t": self.rb._t}
+        if self.T == 1:                    # the historical checkpoint schema
+            return {"rng": self.rb.rng.bit_generator.state, "t": self.rb._t}
+        return {"tenants": [{"rng": rb.rng.bit_generator.state, "t": rb._t}
+                            for rb in self.rbs]}
 
     def load_state(self, state: Dict[str, Any]) -> None:
+        if "tenants" in state:
+            assert len(state["tenants"]) == self.T, (len(state["tenants"]),
+                                                     self.T)
+            for rb, st in zip(self.rbs, state["tenants"]):
+                rb.rng.bit_generator.state = st["rng"]
+                rb._t = int(st["t"])
+            return
         self.rb.rng.bit_generator.state = state["rng"]
         self.rb._t = int(state["t"])
 

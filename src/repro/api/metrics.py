@@ -22,8 +22,8 @@ from typing import Any, Dict, List, Optional
 from repro.core.executor import scalarize as _scalarize
 
 
-@dataclass
-class RoundMetrics:
+@dataclass(eq=False)                       # identity hash: the session tracks
+class RoundMetrics:                        # live instances in a WeakSet
     """One training step/round, structured.
 
     ``loss`` (and ``extras`` values) may be device arrays before
@@ -61,6 +61,20 @@ class RoundMetrics:
             tokens_per_sec=(self.tokens_per_sec if tokens_per_sec is None
                             else tokens_per_sec),
             materialized=True)
+
+    def flush_(self) -> "RoundMetrics":
+        """Host-sync IN PLACE (``materialize`` returns a copy; this mutates).
+
+        The session calls this on every outstanding metric before a
+        donation-invalidating backend call (``repartition``, checkpoint
+        load): a lazy device value read after its buffers were donated away
+        would be garbage.  Idempotent; timing fields are left for the run
+        loop's flush to fill."""
+        if not self.materialized:
+            self.loss = _scalarize(self.loss)
+            self.extras = {k: _scalarize(v) for k, v in self.extras.items()}
+            self.materialized = True
+        return self
 
     def to_dict(self) -> Dict[str, Any]:
         """Flat history dict (the shape ``launch/train.py`` always logged):

@@ -37,6 +37,8 @@ from __future__ import annotations
 
 import json
 import time
+import warnings
+import weakref
 from typing import Any, Dict, List, Optional, Sequence
 
 from repro.checkpoint import checkpoint as ckpt
@@ -47,6 +49,7 @@ from .backends import (CachedBackend, FusedBackend, PjitBackend,
 from .data import PjitDataSource, RingDataSource
 from .metrics import Callback, RoundMetrics
 from .policies import resolve_policy
+from .tenants import TenantGroup
 
 BACKENDS = {"reference": ReferenceBackend, "fused": FusedBackend,
             "cached": CachedBackend, "pjit": PjitBackend}
@@ -65,6 +68,10 @@ class RingSession:
         self.step_count = 0
         self._last_boundary: Optional[int] = None
         self._create_args = create_args or {"backend": backend.name}
+        # every un-materialized RoundMetrics this session has handed out —
+        # flushed (host-synced in place) before any donation-invalidating
+        # backend call (repartition / load), see flush_metrics()
+        self._live_metrics: "weakref.WeakSet[RoundMetrics]" = weakref.WeakSet()
 
     # ------------------------------------------------------------------
     @classmethod
@@ -76,21 +83,35 @@ class RingSession:
                packed: bool = True, cache_dtype: str = "native",
                impl: str = "jnp", params: Optional[Dict[str, Any]] = None,
                spans: Any = None, device_profiles: Any = None,
+               tenants: int = 1,
                data: Any = None, callbacks: Sequence[Callback] = (),
                log=print) -> "RingSession":
         """Wire a session from names: backend in {'pjit', 'reference',
         'fused', 'cached'} (or a ready Backend instance), policy in
         {'interval', 'plateau', None=paper rule} (or an UnfreezePolicy).
+        Every named backend is built through ONE ``Backend.build`` call —
+        each adapter validates or ignores the kwargs it doesn't support.
 
         ``cached`` needs ``slots_per_epoch`` (the cache's key space);
-        ``cache_capacity`` defaults to it.  ``packed`` (fused/cached) selects
-        the packed-conveyor Phase A (one ``S*M + F - 1``-tick stream per
-        round; False = the per-owner scan, kept for A/B benchmarking);
+        ``cache_capacity`` defaults to it (x ``tenants``).  ``packed``
+        (fused/cached) selects the packed-conveyor Phase A (one
+        ``S*M + F - 1``-tick stream per round, ``T*S*M + F - 1`` with
+        tenants; False = the per-owner scan, kept for A/B benchmarking);
         ``cache_dtype`` in {'native', 'f32', 'bf16', 'int8'} compresses the
         activation-cache entries (bf16 halves, int8 quarters the bytes per
         entry).  ``data=None`` builds the standard synthetic per-client
         datasets exactly as ``launch/train.py`` always did, so session runs
         are comparable to the seed drivers.
+
+        Multi-tenant personalization (``tenants=T > 1``, fused/cached only):
+        ONE frozen trunk serves T adapter sets — batches gain a tenant axis
+        ([S, T, M, mb, seq], per-tenant data streams from seeds
+        ``tc.seed + 7919*t``), metrics gain ``tenant_losses``, the cache
+        partitions per tenant, and :attr:`tenants` exposes per-tenant
+        :class:`~repro.api.tenants.TenantGroup` handles (save/load one
+        tenant's adapters+moments through an ``AdapterStore``).  Per tenant,
+        the joint session trains bit-identically to T independent
+        single-tenant sessions (tests/test_tenants.py).
 
         Heterogeneous rings (ring backends only): ``device_profiles`` — one
         speed (float) or ``partition.DeviceProfile`` per stage, in ring order
@@ -103,47 +124,18 @@ class RingSession:
         """
         policy = resolve_policy(policy, tc)
         S = n_stages or tc.n_stages
+        if tenants < 1:
+            raise ValueError(f"tenants must be >= 1, got {tenants}")
         if isinstance(backend, str):
             if backend not in BACKENDS:
                 raise ValueError(f"unknown backend {backend!r}; "
                                  f"known: {sorted(BACKENDS)}")
-            if backend == "pjit" and (spans is not None
-                                      or device_profiles is not None):
-                raise ValueError(
-                    "spans/device_profiles describe the ring's stage layout "
-                    "— they have no meaning for the pjit backend")
-            if backend == "pjit":
-                be = PjitBackend(cfg, tc, policy, impl=impl, params=params)
-            elif backend == "cached":
-                if not slots_per_epoch:
-                    raise ValueError(
-                        "backend='cached' needs slots_per_epoch >= 1: the "
-                        "activation cache keys on stable batch slots — with "
-                        "streaming draws no key ever repeats. Use "
-                        "backend='fused' for non-repeating data.")
-                cap = (cache_capacity if cache_capacity is not None
-                       else slots_per_epoch)
-                if 0 < cap < slots_per_epoch:
-                    # round-robin slots + LRU: every slot is evicted before
-                    # its revisit — all capture cost, zero hits
-                    log(f"WARNING: cache_capacity {cap} < slots_per_epoch "
-                        f"{slots_per_epoch}: the cache will thrash (0% hits, "
-                        f"capture overhead every round) — raise the capacity "
-                        f"or use backend='fused'")
-                be = CachedBackend(cfg, tc, policy, n_stages=S,
-                                   cache_capacity=cap, params=params,
-                                   packed=packed, cache_dtype=cache_dtype,
-                                   spans=spans,
-                                   device_profiles=device_profiles)
-            elif backend == "fused":
-                be = FusedBackend(cfg, tc, policy, n_stages=S, params=params,
-                                  packed=packed, cache_dtype=cache_dtype,
-                                  spans=spans,
-                                  device_profiles=device_profiles)
-            else:
-                be = BACKENDS[backend](cfg, tc, policy, n_stages=S,
-                                       params=params, spans=spans,
-                                       device_profiles=device_profiles)
+            be = BACKENDS[backend].build(
+                cfg, tc, policy, n_stages=S, spans=spans,
+                device_profiles=device_profiles, params=params,
+                slots_per_epoch=slots_per_epoch,
+                cache_capacity=cache_capacity, packed=packed,
+                cache_dtype=cache_dtype, impl=impl, tenants=tenants, log=log)
         else:
             be = backend
             # a ready instance already embeds the policy that drives its
@@ -151,6 +143,11 @@ class RingSession:
             # observes losses into, or a loss-driven policy would never
             # unfreeze (and the monotone check would blame the wrong rule).
             policy = getattr(be, "policy", policy)
+            if getattr(be, "T", 1) != tenants and tenants != 1:
+                raise ValueError(
+                    f"tenants={tenants} conflicts with the ready backend's "
+                    f"T={getattr(be, 'T', 1)} — the instance decides")
+            tenants = getattr(be, "T", 1)
             if isinstance(be, CachedBackend) and data is None \
                     and not slots_per_epoch:
                 raise ValueError(
@@ -161,12 +158,14 @@ class RingSession:
         if data is None:
             data = (PjitDataSource(cfg, tc) if be.kind == "pjit"
                     else RingDataSource(cfg, tc, getattr(be, "S", S),
-                                        slots_per_epoch=slots_per_epoch))
+                                        slots_per_epoch=slots_per_epoch,
+                                        tenants=tenants))
         be_spans = getattr(be, "spans", None)
         create_args = {"backend": be.name, "n_stages": getattr(be, "S", None),
                        "slots_per_epoch": slots_per_epoch,
                        "cache_capacity": cache_capacity, "impl": impl,
                        "packed": packed, "cache_dtype": cache_dtype,
+                       "tenants": tenants,
                        # span layout rides in the checkpoint so restore
                        # rebuilds the same heterogeneous partition (JSON:
                        # list of [begin, end] pairs)
@@ -174,6 +173,17 @@ class RingSession:
                                  if be_spans is not None else None)}
         return cls(cfg, tc, be, policy, data, callbacks=callbacks,
                    create_args=create_args)
+
+    # ------------------------------------------------------------------
+    @property
+    def n_tenants(self) -> int:
+        return getattr(self.backend, "T", 1)
+
+    @property
+    def tenants(self) -> List[TenantGroup]:
+        """Per-tenant handles (see :class:`~repro.api.tenants.TenantGroup`);
+        a single-tenant session returns one group for tenant 0."""
+        return [TenantGroup(self, t) for t in range(self.n_tenants)]
 
     # ------------------------------------------------------------------
     def step(self, batch: Any = None) -> RoundMetrics:
@@ -203,7 +213,30 @@ class RingSession:
         if self.policy.wants_loss:
             m = m.materialize()            # adaptive policies pay 1 sync/round
             self.policy.observe(self.step_count, m.loss)
+        else:
+            self._live_metrics.add(m)      # flushed before layout changes
         return m
+
+    def flush_metrics(self) -> None:
+        """Host-sync (in place) every un-materialized RoundMetrics this
+        session has handed out.  Called before any backend operation that
+        invalidates live device buffers (repartition's donated restack,
+        checkpoint load): a history entry must never read post-swap bits."""
+        for m in list(self._live_metrics):
+            m.flush_()
+        self._live_metrics.clear()
+
+    def repartition(self, spans: Any) -> None:
+        """Switch the ring's span layout mid-run (elastic membership /
+        re-profiling).  Pending device metrics are flushed FIRST — the
+        restack donates the live param/moment buffers, and a lazy metric
+        materialized after that donation would read freed memory (pinned by
+        tests/test_tenants.py)."""
+        self.flush_metrics()
+        self.backend.repartition(spans)
+        be_spans = getattr(self.backend, "spans", None)
+        self._create_args["spans"] = ([list(sp) for sp in be_spans]
+                                      if be_spans is not None else None)
 
     def run(self, steps: int, *, log_every: int = 1,
             callbacks: Optional[Sequence[Callback]] = None,
@@ -248,8 +281,30 @@ class RingSession:
         return history
 
     # ------------------------------------------------------------------
+    # persistence: the canonical surface is save(path) /
+    # RingSession.restore(path, cfg, tc, ...) / export_adapters(tenant=...);
+    # load() and export_params() remain as deprecated shims.
+    # ------------------------------------------------------------------
+    def export_adapters(self, tenant: int = 0) -> Dict[str, Any]:
+        """One tenant's trainable set as a flat ``{"adapter", "head"}``
+        bundle — the unit an :class:`~repro.api.tenants.AdapterStore`
+        persists and serving hot-swaps.  Ring backends only (the pjit
+        backend's trainable set isn't adapter-shaped)."""
+        d = getattr(self.backend, "driver", None)
+        if d is None or not hasattr(d, "export_adapters"):
+            raise NotImplementedError(
+                f"backend {self.backend.name!r} has no adapter bundle "
+                f"surface; use backend.state() for its full params")
+        return d.export_adapters(tenant)
+
     def export_params(self) -> Dict[str, Any]:
-        """Canonical full param tree ([R, ...] block stack), any backend."""
+        """Deprecated: use ``backend.export_params()`` for the full canonical
+        tree, or :meth:`export_adapters` for the trainable bundle."""
+        warnings.warn(
+            "RingSession.export_params() is deprecated — use "
+            "session.backend.export_params() (full canonical tree) or "
+            "session.export_adapters(tenant=...) (trainable bundle)",
+            DeprecationWarning, stacklevel=2)
         return self.backend.export_params()
 
     def save(self, path: str) -> None:
@@ -272,9 +327,20 @@ class RingSession:
                   opt_state=st["opt"], adapters_only=True, extra=extra)
 
     def load(self, path: str) -> "RingSession":
+        """Deprecated: use the classmethod :meth:`restore` — it rebuilds the
+        session with the checkpoint's recorded shape arguments before
+        loading, which this method cannot do."""
+        warnings.warn(
+            "RingSession.load() is deprecated — use "
+            "RingSession.restore(path, cfg, tc, ...) instead",
+            DeprecationWarning, stacklevel=2)
+        return self._load_into(path)
+
+    def _load_into(self, path: str) -> "RingSession":
         """Load a checkpoint into this (freshly created, same-config)
         session.  Raises on backend-format or policy-type mismatch instead of
         silently reinterpreting moments."""
+        self.flush_metrics()               # load swaps the live buffers
         st = self.backend.state()
         params, meta = ckpt.restore(path, st["params"])
         ex = meta["extra"]
@@ -313,7 +379,7 @@ class RingSession:
         if backend is None:
             backend = ex.get("backend", "fused")
         for k in ("n_stages", "slots_per_epoch", "cache_capacity", "impl",
-                  "packed", "cache_dtype", "spans"):
+                  "packed", "cache_dtype", "spans", "tenants"):
             if k in ex and ex[k] is not None:
                 create_kwargs.setdefault(k, ex[k])
         if backend == "pjit":
@@ -322,4 +388,4 @@ class RingSession:
             create_kwargs.pop("spans", None)
         sess = cls.create(cfg, tc, backend=backend, policy=policy,
                           **create_kwargs)
-        return sess.load(path)
+        return sess._load_into(path)

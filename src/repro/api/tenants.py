@@ -1,0 +1,162 @@
+"""Multi-tenant personalization surface: AdapterStore + TenantGroup.
+
+One frozen trunk, T adapter sets per ring: a multi-tenant ``RingSession``
+(``tenants=T``) trains T per-tenant adapter+head sets in one joint conveyor.
+This module is the unit of *exchange* around that loop:
+
+  * :class:`AdapterStore` — a directory of named adapter bundles.  Each entry
+    is one tenant's complete trainable set (``{"adapter": [R, ...] tree,
+    "head": head tree}``) persisted through ``checkpoint.save`` — the Adam
+    moments ride along under the existing ``opt::`` key namespace, so a
+    bundle is fully resumable, a few MB even for a 7B trunk.  The store is
+    the hand-off point between training and serving: ``launch/serve.py``'s
+    registry watches entry mtimes and hot-swaps freshly trained adapters
+    into the running batcher without a restart (the S-LoRA pattern: one
+    shared trunk in memory, adapters grafted per request).
+  * :class:`TenantGroup` — one tenant's view of a live session: per-tenant
+    loss out of the joint round metrics, per-tenant cache hit accounting,
+    and ``save_to``/``load_from`` that move exactly that tenant's adapters +
+    moments through a store (loading flushes ONLY that tenant's cache
+    partition — neighbors keep their entries).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.checkpoint import checkpoint as ckpt
+
+BUNDLE_FORMAT = "AdapterStore/v1"
+
+
+class AdapterStore:
+    """Directory-backed store of named adapter bundles.
+
+    Layout: ``<root>/<name>.npz`` + ``<root>/<name>.json`` per entry
+    (checkpoint module format; optimizer moments under ``opt::`` keys).
+    Names are path fragments — keep them to ``[A-Za-z0-9_.-]``.
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, name: str) -> str:
+        if os.sep in name or name.startswith("."):
+            raise ValueError(f"bundle name {name!r} must be a plain filename")
+        return os.path.join(self.root, name)
+
+    def names(self) -> List[str]:
+        return sorted(f[:-5] for f in os.listdir(self.root)
+                      if f.endswith(".json"))
+
+    def __contains__(self, name: str) -> bool:
+        return os.path.exists(self._path(name) + ".json")
+
+    def mtime(self, name: str) -> float:
+        """Payload mtime — the serve registry's staleness probe."""
+        return os.path.getmtime(self._path(name) + ".npz")
+
+    def put(self, name: str, bundle: Dict[str, Any], *,
+            opt: Any = None, step: int = 0,
+            meta: Optional[Dict[str, Any]] = None) -> None:
+        """Persist one tenant's ``{"adapter", "head"}`` bundle (+ optional
+        per-tenant Adam moments under ``opt::``).  Atomic enough for the
+        serve-side mtime watch: the .npz lands before the .json that
+        announces it."""
+        if set(bundle) != {"adapter", "head"}:
+            raise ValueError(
+                f"a bundle has exactly the keys {{'adapter', 'head'}} "
+                f"(RingExecutor.export_adapters's layout), got "
+                f"{sorted(bundle)}")
+        ckpt.save(self._path(name), bundle, step=step, opt_state=opt,
+                  extra={"format": BUNDLE_FORMAT, **(meta or {})})
+
+    def get(self, name: str, like: Dict[str, Any]
+            ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """Load a bundle into the structure/shapes of ``like`` (use the live
+        ``export_adapters()`` tree).  Returns ``(bundle, meta)``."""
+        bundle, meta = ckpt.restore(self._path(name), like)
+        fmt = meta.get("extra", {}).get("format")
+        if fmt != BUNDLE_FORMAT:
+            raise ValueError(
+                f"{self._path(name)!r} is not an adapter bundle "
+                f"(format={fmt!r}); AdapterStore only reads entries it wrote")
+        return bundle, meta
+
+    def get_opt(self, name: str, like: Any) -> Any:
+        """Load a bundle's Adam moments (``opt::`` namespace; raises if the
+        bundle was saved without them)."""
+        return ckpt.restore_opt(self._path(name), like)
+
+    def has_opt(self, name: str) -> bool:
+        import json
+        with open(self._path(name) + ".json") as f:
+            return bool(json.load(f).get("has_opt_state"))
+
+
+class TenantGroup:
+    """One tenant's handle on a live multi-tenant session.
+
+    Obtained from ``RingSession.tenants`` — never constructed directly.
+    All methods address tenant ``self.index`` of the session's executor;
+    ``load_from`` invalidates only this tenant's cache partition.
+    """
+
+    def __init__(self, session, index: int):
+        self.session = session
+        self.index = index
+
+    def __repr__(self) -> str:
+        return (f"TenantGroup({self.index} of "
+                f"{getattr(self.session.backend, 'T', 1)})")
+
+    @property
+    def _driver(self):
+        d = getattr(self.session.backend, "driver", None)
+        if d is None or not hasattr(d, "export_adapters"):
+            raise NotImplementedError(
+                f"backend {self.session.backend.name!r} has no per-tenant "
+                f"adapter surface")
+        return d
+
+    # -- metrics --------------------------------------------------------
+    def metrics(self, m) -> Dict[str, Any]:
+        """This tenant's slice of a (materialized) RoundMetrics: its own
+        loss out of the joint round, plus its cache hit/miss counters."""
+        out = {"step": m.step, "boundary": m.boundary, "depth": m.depth,
+               "tenant": self.index}
+        tl = m.extras.get("tenant_losses")
+        out["loss"] = tl[self.index] if tl is not None else m.loss
+        if m.cache and "tenant_cache_hits" in m.cache:
+            out["cache_hits"] = m.cache["tenant_cache_hits"][self.index]
+            out["cache_misses"] = m.cache["tenant_cache_misses"][self.index]
+        return out
+
+    # -- adapters + moments ---------------------------------------------
+    def export_adapters(self) -> Dict[str, Any]:
+        return self._driver.export_adapters(self.index)
+
+    def export_opt(self) -> Dict[str, Any]:
+        return self._driver.export_tenant_opt(self.index)
+
+    def save_to(self, store: AdapterStore, name: str, *,
+                with_opt: bool = True,
+                meta: Optional[Dict[str, Any]] = None) -> None:
+        """Persist this tenant's adapters (+ moments under ``opt::``) as a
+        named store entry — immediately servable by a watching registry."""
+        store.put(name, self.export_adapters(),
+                  opt=self.export_opt() if with_opt else None,
+                  step=self.session.step_count,
+                  meta={"tenant": self.index, **(meta or {})})
+
+    def load_from(self, store: AdapterStore, name: str, *,
+                  with_opt: bool = True) -> None:
+        """Install a store entry into this tenant's slot.  Flushes only this
+        tenant's ``(tenant, slot, boundary)`` cache partition; the other
+        tenants' entries (and hit-rates) are untouched."""
+        bundle, _ = store.get(name, self.export_adapters())
+        self._driver.import_adapters(self.index, bundle)
+        if with_opt and store.has_opt(name):
+            self._driver.import_tenant_opt(
+                self.index, store.get_opt(name, self.export_opt()))

@@ -310,6 +310,25 @@ class ActivationCache:
         return n
 
     # ------------------------------------------------------------------
+    def invalidate_tenant(self, tenant: Hashable) -> int:
+        """Drop only the entries whose key's FIRST component is ``tenant``.
+
+        The multi-tenant executor keys entries ``(tenant, slot, boundary)``;
+        a single tenant's adapter import (or any per-tenant staleness) kills
+        only that tenant's partition — its neighbors' rows, LRU order, and
+        hit-rates are untouched.  The freed buffer rows return to the free
+        list for reuse.  Returns the number of entries dropped; counts one
+        invalidation event if any were live.
+        """
+        dead = [k for k in self._rows
+                if isinstance(k, tuple) and len(k) > 0 and k[0] == tenant]
+        for k in dead:
+            self._free.append(self._rows.pop(k))
+        if dead:
+            self.invalidations += 1
+        return len(dead)
+
+    # ------------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
         total = self.hits + self.misses
         eb = self.entry_bytes()

@@ -57,6 +57,19 @@ aligns DOWN to span edges, the cache binds to the layout
 ``(boundary, mode)`` executable for the simulator-vs-executor differential
 tests (tests/test_partition_exec.py).
 
+Multi-tenant personalization (``tenants=T > 1``): one frozen trunk, T adapter
+sets per ring.  Adapters/moments gain an interior tenant axis
+([S, T, max_span, ...]; head [T, ...]), the packed conveyor chains all T·S·M
+tenant-owner microbatches of a round into one ``T·S·M + F - 1``-tick Phase-A
+pass (the trunk is frozen and bit-identical across tenants, and per-tick
+shapes stay exactly single-tenant, so each microbatch's op sequence is
+bit-identical to a solo run), Phase B + AdamW scan over the tenant axis with
+single-tenant shapes inside, and the activation cache
+partitions per tenant under ``(tenant, slot, boundary)`` keys with per-tenant
+invalidation (``import_adapters`` flushes one tenant without touching its
+neighbors).  Per tenant, a joint T-tenant session matches T independent
+single-tenant sessions — asserted by tests/test_tenants.py.
+
 Numerics match ``RingTrainer`` exactly (same ``adamw.leaf_update`` math,
 constant lr, no bias correction) — asserted by tests/test_executor.py; the
 cached path matches the uncached fused path — asserted by
@@ -121,7 +134,7 @@ def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
                      packed: bool = True, cache_dtype: str = "native",
                      cache_src_dtype: Any = None,
                      spans: Optional[Sequence[Span]] = None,
-                     tick_record=None):
+                     tick_record=None, tenants: int = 1):
     """Build the fused round in one of three modes:
 
       direct :  fn(stage_blocks, shared, opt_state, tokens, labels)
@@ -159,14 +172,31 @@ def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
     measured ledger tests/test_partition_exec.py pins against
     ``pipeline.pipeline_tick_counts``.
 
-    Static per build: (boundary, mode, packed, cache_dtype, spans).
+    Static per build: (boundary, mode, packed, cache_dtype, spans, tenants).
     ``on_trace`` (if given) is called each time the function body is traced
     — i.e. once per XLA compilation — which is how tests count executables.
     Wrap the result in ``jax.jit(..., donate_argnums=(0, 1, 2))``
     (RingExecutor does; the cache buffers are never donated — they outlive
     the round).
+
+    Multi-tenant (``tenants=T > 1``): one frozen trunk, T adapter sets.
+    Input trees gain one interior tenant axis — adapter leaves
+    ``[S, T, max_span, ...]`` (still sharded P('stage')), head/opt-head
+    ``[T, ...]`` (replicated), tokens/labels ``[S, T, M, mb, seq]`` — so
+    every PartitionSpec is IDENTICAL to T=1.  Phase A runs once on the
+    shared trunk with all tenants chained onto the conveyor's time axis
+    (``ring_phase_a_packed(n_tenants=T)``); Phase B runs per tenant via a
+    ``lax.scan`` over the stacked adapters (single-tenant shapes inside),
+    and the masked AdamW update is elementwise on the stacked moments —
+    both bit-equivalent to T independent single-tenant updates (the
+    scalar stage mask broadcasts).  The metrics tuple gains a trailing
+    ``tenant_losses [T]``; capture emits ``[T, S_stage, S_owner, M, ...]``
+    (one cache entry per tenant) and cached mode takes a ``rows [T]``
+    vector instead of a scalar row.
     """
     assert mode in FUSED_MODES, mode
+    assert tenants >= 1, tenants
+    T = tenants
     S = n_stages
     spans = pl.resolve_spans(cfg.repeats, S, spans)
     F = frozen_stage_count(spans, boundary)
@@ -176,7 +206,7 @@ def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
                               record=lambda t: rec("phase_a", t))
     phase_a_packed = pl.ring_phase_a_packed(
         cfg, n_stages=S, boundary=boundary, n_micro=n_micro, spans=spans,
-        record=lambda t: rec("phase_a_packed", t))
+        record=lambda t: rec("phase_a_packed", t), n_tenants=T)
     phase_b = pl.ring_phase_b(cfg, n_stages=S, boundary=boundary,
                               n_micro=n_micro, spans=spans,
                               record=lambda t: rec("phase_b", t))
@@ -233,6 +263,75 @@ def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
                    "count": opt_state["count"] + S}
         return new_blocks, new_shared, new_opt, (losses, mean_loss), h_caps
 
+    def run_round_mt(stage_blocks, shared, opt_state, get_h_B, my_labels):
+        """Multi-tenant owner scan: Phase B scans over the tenant axis, the
+        masked AdamW update runs elementwise on the tenant-stacked moments.
+        ``get_h_B(owner, adapters)`` -> [T, M, mb, seq, D]; ``my_labels``
+        [T, M, mb, seq]; adapter leaves carry [T, max_span, ...] inside the
+        scan, head leaves [T, ...].  Per tenant this is exactly
+        ``run_round``'s math on exactly single-tenant shapes, so joint
+        training equals T independent sessions bit-for-bit."""
+        hot = (lax.axis_index("stage") >= F).astype(jnp.float32)
+        my_blocks = jax.tree.map(lambda x: x[0], stage_blocks)
+        backbone = {k: v for k, v in my_blocks.items() if k != "adapter"}
+        shared_rest = {k: v for k, v in shared.items() if k != "head"}
+        unstage = lambda t: jax.tree.map(lambda x: x[0], t)
+        restage = lambda t: jax.tree.map(lambda x: x[None], t)
+
+        def owner_iter(carry, owner):
+            ad, head, m_ad, v_ad, m_hd, v_hd = carry
+            h_B = get_h_B(owner, ad)                 # [T, M, mb, seq, D]
+
+            # Per-tenant Phase B over the stacked adapters: a lax.scan over
+            # the tenant axis, NOT a vmap — inside the scan every tensor has
+            # exactly the single-tenant shapes, so each tenant's grads (and
+            # thus its Adam trajectory) are bit-identical to an independent
+            # single-tenant session.  A vmap batches the kernels ([T, ...]
+            # shapes), which reassociates reductions at the ulp level — and
+            # the first Adam steps amplify ulp-level grad noise to O(lr)
+            # sign flips, blowing the 1e-5/1e-3 differential pins.
+            def per_tenant(_, args):
+                ad_t, head_t, h_t, lab_t = args
+
+                def local_loss(ad_, head_):
+                    return phase_b(owner, {**backbone, "adapter": ad_},
+                                   {**shared_rest, "head": head_}, h_t, lab_t)
+
+                return None, jax.value_and_grad(
+                    local_loss, argnums=(0, 1))(ad_t, head_t)
+
+            _, (l_loc, (g_ad, g_hd)) = lax.scan(
+                per_tenant, None, (ad, head, h_B, my_labels))  # l_loc [T]
+            g_hd = jax.tree.map(lambda g: lax.psum(g, "stage"), g_hd)
+            # stacked trees, same elementwise update: the scalar ``hot`` mask
+            # broadcasts over the leading tenant axis.
+            ad2, m_ad2, v_ad2 = adamw.tree_update(
+                g_ad, m_ad, v_ad, ad, tc, lr=lr, mask=hot)
+            head2, m_hd2, v_hd2 = adamw.tree_update(
+                g_hd, m_hd, v_hd, head, tc, lr=lr)
+            return (ad2, head2, m_ad2, v_ad2, m_hd2, v_hd2), (l_loc, h_B)
+
+        init = (my_blocks["adapter"], shared["head"],
+                unstage(opt_state["m"]["adapter"]), unstage(opt_state["v"]["adapter"]),
+                opt_state["m"]["head"], opt_state["v"]["head"])
+        (ad, head, m_ad, v_ad, m_hd, v_hd), (local_losses, h_caps) = lax.scan(
+            owner_iter, init, jnp.arange(S))
+        losses_to = lax.psum(local_losses, "stage")  # [S_owner, T]
+        mean_loss = jnp.mean(losses_to)
+        tenant_losses = losses_to.mean(axis=0)       # [T]
+        losses = losses_to.mean(axis=1)              # [S] per-owner, T=1 shape
+
+        new_blocks = {**stage_blocks, "adapter": restage(ad)}
+        new_shared = {**shared, "head": head}
+        new_opt = {"m": {"adapter": restage(m_ad), "head": m_hd},
+                   "v": {"adapter": restage(v_ad), "head": v_hd},
+                   "count": opt_state["count"] + S}
+        return (new_blocks, new_shared, new_opt,
+                (losses, mean_loss, tenant_losses), h_caps)
+
+    run = run_round if T == 1 else run_round_mt
+    met_spec = (P(), P()) if T == 1 else (P(), P(), P())
+
     if mode in ("direct", "capture"):
 
         def fused(stage_blocks, shared, opt_state, tokens, labels):
@@ -245,11 +344,25 @@ def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
 
             # Embeddings are round-constant (outside the trainable set): embed +
             # gather once, not once per owner-iteration.
-            seq = my_tokens.shape[2]
-            mb = my_tokens.shape[1]
+            seq = my_tokens.shape[-1]
+            mb = my_tokens.shape[-2]
             pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None],
                                    (mb, seq))
-            emb_g = pl.gather_embeddings(cfg, shared_rest, my_tokens, pos)
+            if T == 1:
+                emb_g = pl.gather_embeddings(cfg, shared_rest, my_tokens, pos)
+            else:
+                # my_tokens [T, M, mb, seq]: embed all tenants' microbatches
+                # in one vmap, then restore the tenant axis.
+                tok_flat = my_tokens.reshape((T * n_micro,)
+                                             + my_tokens.shape[2:])
+                e = pl.gather_embeddings(cfg, shared_rest, tok_flat, pos)
+                emb_g = e.reshape((S, T, n_micro) + e.shape[2:])
+
+            # The shared frozen trunk: Phase A reads only frozen adapter
+            # rows, which are bit-identical across tenants (shared init +
+            # stage mask), so any tenant's slice works — use tenant 0.
+            trunk_ad = (my_blocks["adapter"] if T == 1 else
+                        jax.tree.map(lambda x: x[0], my_blocks["adapter"]))
 
             if packed and F >= 2:
                 # One continuous conveyor over ALL owners' frozen-trunk
@@ -257,29 +370,51 @@ def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
                 # frozen stages' blocks, and the stage-masked optimizer keeps
                 # those bit-identical across owner-iterations, so the
                 # round-start adapters give exactly what each iteration's
-                # carried adapters would have.
-                h_B_all = phase_a_packed(my_blocks, emb_g)  # [S, M, mb, seq, D]
+                # carried adapters would have.  [S, M, ...] / [S, T, M, ...].
+                h_B_all = phase_a_packed(
+                    {**backbone, "adapter": trunk_ad}, emb_g)
 
                 def get_h_B(owner, ad):
                     return lax.dynamic_index_in_dim(h_B_all, owner, 0,
                                                     keepdims=False)
-            else:
+            elif T == 1:
 
                 def get_h_B(owner, ad):
                     return phase_a(owner, {**backbone, "adapter": ad}, emb_g)
+            else:
 
-            blocks2, shared2, opt2, metrics, h_caps = run_round(
+                def get_h_B(owner, ad):
+                    # Per-tenant Phase A as a lax.scan (NOT a vmap): inside
+                    # the scan every tensor has exact single-tenant shapes,
+                    # keeping each tenant's forward bit-identical to an
+                    # independent session (see run_round_mt's Phase-B note).
+                    trunk = {**backbone,
+                             "adapter": jax.tree.map(lambda x: x[0], ad)}
+
+                    def per_tenant(_, e_t):
+                        return None, phase_a(owner, trunk, e_t)
+
+                    _, h = lax.scan(per_tenant, None,
+                                    jnp.swapaxes(emb_g, 0, 1))
+                    return h                             # [T, M, mb, seq, D]
+
+            blocks2, shared2, opt2, metrics, h_caps = run(
                 stage_blocks, shared, opt_state, get_h_B, my_labels)
             if mode == "capture":
                 # packed capture writes the whole owner stack in one pass —
                 # h_caps is the scan-stacked copy of h_B_all either way.
-                return blocks2, shared2, opt2, metrics, h_caps[None]
+                if T == 1:
+                    return blocks2, shared2, opt2, metrics, h_caps[None]
+                # [S_owner, T, M, ...] -> [T, S_stage=1, S_owner, M, ...]:
+                # one buffer entry per tenant, each the T=1 entry shape.
+                return (blocks2, shared2, opt2, metrics,
+                        jnp.swapaxes(h_caps, 0, 1)[:, None])
             return blocks2, shared2, opt2, metrics
 
         opt_spec = ring_opt_specs()
-        out = (P("stage"), P(), opt_spec, (P(), P()))
+        out = (P("stage"), P(), opt_spec, met_spec)
         if mode == "capture":
-            out = out + (P("stage"),)
+            out = out + ((P("stage"),) if T == 1 else (P(None, "stage"),))
         return compat.shard_map(
             fused, mesh=mesh,
             in_specs=(P("stage"), P(), opt_spec, P("stage"), P("stage")),
@@ -294,16 +429,23 @@ def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
     def cached_body(stage_blocks, shared, opt_state, h_slot, labels):
         my_labels = labels[0]
 
+        # T=1: h_slot [S_owner, M, ...]; T>1: [T, S_owner, M, ...] — the
+        # owner index sits after the tenant axis.
         def get_h_B(owner, ad):
-            return lax.dynamic_index_in_dim(h_slot, owner, 0, keepdims=False)
+            return lax.dynamic_index_in_dim(h_slot, owner, 0 if T == 1 else 1,
+                                            keepdims=False)
 
-        blocks2, shared2, opt2, metrics, _ = run_round(
+        blocks2, shared2, opt2, metrics, _ = run(
             stage_blocks, shared, opt_state, get_h_B, my_labels)
         return blocks2, shared2, opt2, metrics
 
     def _row(buf, row):
-        # [cap, S_stage=1(local), S_owner, ...] -> this stage's row
-        return lax.dynamic_index_in_dim(buf[:, 0], row, 0, keepdims=False)
+        # [cap, S_stage=1(local), S_owner, ...] -> this stage's row(s).
+        # T=1: scalar row -> [S_owner, ...]; T>1: rows [T] -> a gather
+        # [T, S_owner, ...] (one buffer row per tenant).
+        if T == 1:
+            return lax.dynamic_index_in_dim(buf[:, 0], row, 0, keepdims=False)
+        return buf[:, 0][row]
 
     if cache_dtype == "int8":
 
@@ -322,7 +464,7 @@ def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
             fused_cached_q, mesh=mesh,
             in_specs=(P("stage"), P(), opt_spec, P(None, "stage"),
                       P(None, "stage"), P(), P("stage")),
-            out_specs=(P("stage"), P(), opt_spec, (P(), P())))
+            out_specs=(P("stage"), P(), opt_spec, met_spec))
 
     def fused_cached(stage_blocks, shared, opt_state, cache_buf, row, labels):
         if on_trace is not None:
@@ -336,7 +478,7 @@ def make_fused_round(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh, *,
         fused_cached, mesh=mesh,
         in_specs=(P("stage"), P(), opt_spec, P(None, "stage"), P(),
                   P("stage")),
-        out_specs=(P("stage"), P(), opt_spec, (P(), P())))
+        out_specs=(P("stage"), P(), opt_spec, met_spec))
 
 
 class RingExecutor:
@@ -364,10 +506,13 @@ class RingExecutor:
                  donate: bool = True, cache_capacity: int = 0,
                  schedule: Optional[Any] = None, packed: bool = True,
                  cache_dtype: str = "native",
-                 spans: Optional[Sequence[Span]] = None):
+                 spans: Optional[Sequence[Span]] = None,
+                 tenants: int = 1):
         assert len(cfg.pattern) == 1, "ring executor needs a uniform pattern"
+        assert tenants >= 1, tenants
         self.cfg, self.tc, self.mesh = cfg, tc, mesh
         self.S, self.M = n_stages, n_micro
+        self.T = tenants
         self.packed = packed
         self.cache_dtype = cache_dtype
         # ``spans`` makes heterogeneous (uneven, assign_layers-produced)
@@ -380,9 +525,26 @@ class RingExecutor:
                     if not pl.is_ragged(self.spans) else None)
         self.stage_blocks, self.shared = pl.stage_stack(params, cfg, n_stages,
                                                         spans=self.spans)
+        if tenants > 1:
+            # One frozen trunk, T adapter sets: adapters gain an interior
+            # tenant axis [S, T, max_span, ...] (stage axis stays leading so
+            # the P('stage') specs are unchanged); the head is per-tenant
+            # [T, ...].  All tenants start from the same init — the shared
+            # Phase-A trunk relies on frozen rows staying bit-identical.
+            self.stage_blocks = {
+                **self.stage_blocks,
+                "adapter": adamw.tenant_stack(
+                    self.stage_blocks["adapter"], tenants, axis=1)}
+            self.shared = {
+                **self.shared,
+                "head": adamw.tenant_stack(self.shared["head"], tenants)}
         self._params_rest = {k: v for k, v in params.items()
                              if k not in ("blocks",)}
         self.opt_state = ring_opt_init(self.stage_blocks, self.shared)
+        # per-tenant cache accounting (satellite of the partitioned cache:
+        # a tenant's invalidation must not move its neighbors' hit-rates)
+        self.tenant_hits = [0] * tenants
+        self.tenant_misses = [0] * tenants
         # Any object with ``depth_at(step, n_blocks) -> int`` works here
         # (repro.api's UnfreezePolicy protocol); the monotone-boundary
         # contract is still re-checked at runtime in ``round`` regardless of
@@ -433,7 +595,8 @@ class RingExecutor:
                                      packed=self.packed,
                                      cache_dtype=self.cache_dtype,
                                      cache_src_dtype=src_dt,
-                                     spans=self.spans, tick_record=tick_rec)
+                                     spans=self.spans, tick_record=tick_rec,
+                                     tenants=self.T)
             donate = (0, 1, 2) if self.donate else ()
             self._fns[key] = jax.jit(fused, donate_argnums=donate)
         return self._fns[key]
@@ -489,19 +652,36 @@ class RingExecutor:
     # ------------------------------------------------------------------
     def _entry_shape(self, labels: Array):
         """Global shape of one cache entry for the current batch
-        ([S_stage, S_owner, M, mb, seq, D]; dtype is whatever capture stored)."""
-        _, M, mb, seq = labels.shape
+        ([S_stage, S_owner, M, mb, seq, D]; dtype is whatever capture stored).
+        Multi-tenant entries keep the SAME per-entry shape — each tenant owns
+        its own buffer row under its own ``(tenant, slot, boundary)`` key."""
+        if self.T > 1:
+            _, _, M, mb, seq = labels.shape
+        else:
+            _, M, mb, seq = labels.shape
         return (self.S, self.S, M, mb, seq, self.cfg.d_model)
+
+    def _keys(self, slot: int, boundary: int):
+        """Cache keys for this round: ``(slot, boundary)`` at T=1 (the PR-4
+        schema, unchanged); ``(tenant, slot, boundary)`` per tenant at T>1."""
+        if self.T == 1:
+            return [(slot, boundary)]
+        return [(t, slot, boundary) for t in range(self.T)]
 
     def round(self, tokens: Array, labels: Array, *,
               slot: Optional[int] = None) -> Dict[str, Any]:
         """One training round: every client acts as initiator once.
 
-        tokens/labels: [S, M, mb, seq] per-client local data for this round.
+        tokens/labels: [S, M, mb, seq] per-client local data for this round
+        ([S, T, M, mb, seq] when ``tenants > 1`` — axis 1 is the tenant).
         slot: stable batch-slot id (same slot => same examples, the cache-key
         contract; see ``data.pipeline.RingBatcher`` with ``slots_per_epoch``).
         Returns metrics as DEVICE arrays — no host sync.  Use
         ``materialize_metrics`` (or ``float()``) at your logging interval.
+        Multi-tenant rounds add ``tenant_losses`` ([T] device array) and hit
+        only when EVERY tenant's key is resident (a partial-hit round re-runs
+        the shared conveyor once and refreshes all T entries; the per-tenant
+        ``index_of`` calls keep per-tenant hit accounting honest).
         """
         boundary = self.boundary_at(self.step)
         if self._last_boundary is not None and boundary > self._last_boundary:
@@ -516,6 +696,7 @@ class RingExecutor:
         self._last_boundary = boundary
 
         cache_hit = False
+        tenant_losses = None
         use_cache = self.cache is not None and slot is not None
         if use_cache:
             if not self.cache.compatible(self._entry_shape(labels)):
@@ -523,39 +704,63 @@ class RingExecutor:
                 use_cache = False
 
         if use_cache:
-            key = (slot, boundary)
-            row = self.cache.index_of(key)
-            if row is not None:
+            keys = self._keys(slot, boundary)
+            rows = [self.cache.index_of(k) for k in keys]
+            if self.T > 1:
+                for t, r in enumerate(rows):
+                    if r is None:
+                        self.tenant_misses[t] += 1
+                    else:
+                        self.tenant_hits[t] += 1
+            if all(r is not None for r in rows):
                 fn = self._fn(boundary, "cached")
+                row_arg = (jnp.int32(rows[0]) if self.T == 1
+                           else jnp.asarray(rows, jnp.int32))
                 if self.cache_dtype == "int8":
                     (self.stage_blocks, self.shared, self.opt_state,
-                     (losses, mean_loss)) = fn(
+                     mets) = fn(
                         self.stage_blocks, self.shared, self.opt_state,
                         self.cache.buffer, self.cache.scales,
-                        jnp.int32(row), labels)
+                        row_arg, labels)
                 else:
                     (self.stage_blocks, self.shared, self.opt_state,
-                     (losses, mean_loss)) = fn(
+                     mets) = fn(
                         self.stage_blocks, self.shared, self.opt_state,
-                        self.cache.buffer, jnp.int32(row), labels)
+                        self.cache.buffer, row_arg, labels)
                 cache_hit = True
             else:
                 fn = self._fn(boundary, "capture")
                 (self.stage_blocks, self.shared, self.opt_state,
-                 (losses, mean_loss), h_cap) = fn(
+                 mets, h_cap) = fn(
                     self.stage_blocks, self.shared, self.opt_state,
                     tokens, labels)
-                self.cache.put(key, h_cap)
+                if self.T == 1:
+                    self.cache.put(keys[0], h_cap)
+                else:
+                    # h_cap [T, S_stage, S_owner, M, mb, seq, D]: one entry
+                    # per tenant, each the T=1 entry shape — a tenant that
+                    # already hit gets its (identical) bits refreshed in place.
+                    for t, k in enumerate(keys):
+                        self.cache.put(k, h_cap[t])
         else:
             fn = self._fn(boundary, "direct")
             (self.stage_blocks, self.shared, self.opt_state,
-             (losses, mean_loss)) = fn(
+             mets) = fn(
                 self.stage_blocks, self.shared, self.opt_state, tokens, labels)
+
+        if self.T == 1:
+            losses, mean_loss = mets
+        else:
+            losses, mean_loss, tenant_losses = mets
 
         self.step += self.S
         out = {"loss": mean_loss, "losses": losses,
                "boundary": boundary, "step": self.step,
                "cache_hit": cache_hit}
+        if tenant_losses is not None:
+            out["tenant_losses"] = tenant_losses
+            out["tenant_cache_hits"] = list(self.tenant_hits)
+            out["tenant_cache_misses"] = list(self.tenant_misses)
         if self.cache is not None:
             out.update(self.cache.stats())
         return out
@@ -580,29 +785,189 @@ class RingExecutor:
         if new == self.spans:
             return
         old = self.spans
-        params = self.export_params()                # flat [R, ...] canonical
-        m_ad = pl.unstack_entry(self.opt_state["m"]["adapter"], old)
-        v_ad = pl.unstack_entry(self.opt_state["v"]["adapter"], old)
-        self.spans = new
-        self.lps = (self.cfg.repeats // self.S
-                    if not pl.is_ragged(new) else None)
-        self.stage_blocks, self.shared = pl.stage_stack(
-            params, self.cfg, self.S, spans=new)
-        self._params_rest = {k: v for k, v in params.items()
-                             if k != "blocks"}
-        self.opt_state = {
-            **self.opt_state,
-            "m": {**self.opt_state["m"],
-                  "adapter": pl.stack_entry(m_ad, new)},
-            "v": {**self.opt_state["v"],
-                  "adapter": pl.stack_entry(v_ad, new)},
-        }
+        if self.T == 1:
+            params = self.export_params()            # flat [R, ...] canonical
+            m_ad = pl.unstack_entry(self.opt_state["m"]["adapter"], old)
+            v_ad = pl.unstack_entry(self.opt_state["v"]["adapter"], old)
+            self.spans = new
+            self.lps = (self.cfg.repeats // self.S
+                        if not pl.is_ragged(new) else None)
+            self.stage_blocks, self.shared = pl.stage_stack(
+                params, self.cfg, self.S, spans=new)
+            self._params_rest = {k: v for k, v in params.items()
+                                 if k != "blocks"}
+            self.opt_state = {
+                **self.opt_state,
+                "m": {**self.opt_state["m"],
+                      "adapter": pl.stack_entry(m_ad, new)},
+                "v": {**self.opt_state["v"],
+                      "adapter": pl.stack_entry(v_ad, new)},
+            }
+        else:
+            # Restack ALL tenants: backbone once, every tenant's adapters
+            # and moments through the tenant-major [T, R, ...] flat form.
+            bb_flat = self._unstack_backbone(old)
+            ad_flat = self._unstack_adapters(self.stage_blocks["adapter"], old)
+            m_flat = self._unstack_adapters(
+                self.opt_state["m"]["adapter"], old)
+            v_flat = self._unstack_adapters(
+                self.opt_state["v"]["adapter"], old)
+            self.spans = new
+            self.lps = (self.cfg.repeats // self.S
+                        if not pl.is_ragged(new) else None)
+            self.stage_blocks = {
+                **pl.stack_entry(bb_flat, new),
+                "adapter": self._stack_adapters(ad_flat, new)}
+            self.opt_state = {
+                **self.opt_state,
+                "m": {**self.opt_state["m"],
+                      "adapter": self._stack_adapters(m_flat, new)},
+                "v": {**self.opt_state["v"],
+                      "adapter": self._stack_adapters(v_flat, new)},
+            }
         self._fns.clear()
         if self.cache is not None:
             self.cache.set_layout(new)
         self._last_boundary = None
 
     # ------------------------------------------------------------------
-    def export_params(self) -> Dict[str, Any]:
-        return pl.unstack(self.stage_blocks, self.cfg, self._params_rest,
-                          self.shared, spans=self.spans)
+    # canonical <-> stacked forms (tenant-aware)
+    # ------------------------------------------------------------------
+
+    def _unstack_backbone(self, spans) -> Dict[str, Any]:
+        """Non-adapter stage blocks -> flat [R, ...] leaves."""
+        bb = {k: v for k, v in self.stage_blocks.items() if k != "adapter"}
+        return pl.unstack_entry(bb, spans)
+
+    def _unstack_adapters(self, stacked: Any, spans) -> Any:
+        """[S, T, max_span, ...] leaves -> tenant-major flat [T, R, ...]."""
+        t_major = jax.tree.map(lambda x: jnp.moveaxis(x, 1, 0), stacked)
+        return pl.unstack_entry(t_major, spans, leading=1)
+
+    def _stack_adapters(self, flat_t: Any, spans) -> Any:
+        """Inverse of ``_unstack_adapters``: [T, R, ...] -> [S, T, max_span, ...]."""
+        t_major = pl.stack_entry(flat_t, spans, leading=1)
+        return jax.tree.map(lambda x: jnp.moveaxis(x, 0, 1), t_major)
+
+    # ------------------------------------------------------------------
+    def export_params(self, tenant: Optional[int] = None) -> Dict[str, Any]:
+        """Canonical (unstacked) param tree.
+
+        T=1: the familiar single-model tree (``tenant`` must be None or 0).
+        T>1 with ``tenant=t``: tenant t's complete single-model tree (shared
+        trunk + its adapters + its head) — directly loadable by serving.
+        T>1 with ``tenant=None``: the tenant-stacked checkpoint tree —
+        adapter leaves [T, R, ...], head leaves [T, ...], trunk unstacked.
+        """
+        if self.T == 1:
+            assert tenant in (None, 0), tenant
+            return pl.unstack(self.stage_blocks, self.cfg, self._params_rest,
+                              self.shared, spans=self.spans)
+        bb_flat = self._unstack_backbone(self.spans)
+        ad_flat = self._unstack_adapters(self.stage_blocks["adapter"],
+                                         self.spans)
+        if tenant is None:
+            entry = {**bb_flat, "adapter": ad_flat}
+            return {**self._params_rest, **self.shared, "blocks": (entry,)}
+        entry = {**bb_flat,
+                 "adapter": jax.tree.map(lambda x: x[tenant], ad_flat)}
+        shared = {**self.shared,
+                  "head": jax.tree.map(lambda x: x[tenant],
+                                       self.shared["head"])}
+        return {**self._params_rest, **shared, "blocks": (entry,)}
+
+    # ------------------------------------------------------------------
+    def export_adapters(self, tenant: int = 0) -> Dict[str, Any]:
+        """One tenant's trainable set as a flat bundle:
+        ``{"adapter": [R, ...] tree, "head": head tree}`` — the unit the
+        AdapterStore persists and serving hot-swaps."""
+        assert 0 <= tenant < self.T, (tenant, self.T)
+        if self.T == 1:
+            ad = pl.unstack_entry(self.stage_blocks["adapter"], self.spans)
+            return {"adapter": ad, "head": self.shared["head"]}
+        ad_flat = self._unstack_adapters(self.stage_blocks["adapter"],
+                                         self.spans)
+        return {"adapter": jax.tree.map(lambda x: x[tenant], ad_flat),
+                "head": jax.tree.map(lambda x: x[tenant],
+                                     self.shared["head"])}
+
+    def import_adapters(self, tenant: int, bundle: Dict[str, Any]) -> None:
+        """Install a flat adapter bundle into tenant ``tenant``'s slot and
+        invalidate ONLY that tenant's cache partition (its stage-F inputs may
+        now differ; neighbors' entries stay valid)."""
+        assert 0 <= tenant < self.T, (tenant, self.T)
+        ad_stacked = pl.stack_entry(bundle["adapter"], self.spans)
+        if self.T == 1:
+            self.stage_blocks = {**self.stage_blocks, "adapter": ad_stacked}
+            self.shared = {**self.shared, "head": bundle["head"]}
+            if self.cache is not None:
+                self.cache.invalidate()
+            return
+        self.stage_blocks = {
+            **self.stage_blocks,
+            "adapter": jax.tree.map(
+                lambda cur, new: cur.at[:, tenant].set(new),
+                self.stage_blocks["adapter"], ad_stacked)}
+        self.shared = {
+            **self.shared,
+            "head": jax.tree.map(lambda cur, new: cur.at[tenant].set(new),
+                                 self.shared["head"], bundle["head"])}
+        if self.cache is not None:
+            self.cache.invalidate_tenant(tenant)
+
+    def export_tenant_opt(self, tenant: int = 0) -> Dict[str, Any]:
+        """One tenant's optimizer state in the flat bundle layout (moments
+        shaped like ``export_adapters``; ``count`` is the shared step)."""
+        assert 0 <= tenant < self.T, (tenant, self.T)
+
+        def flat_moment(tree):
+            if self.T == 1:
+                return {"adapter": pl.unstack_entry(tree["adapter"],
+                                                    self.spans),
+                        "head": tree["head"]}
+            ad = self._unstack_adapters(tree["adapter"], self.spans)
+            return {"adapter": jax.tree.map(lambda x: x[tenant], ad),
+                    "head": jax.tree.map(lambda x: x[tenant], tree["head"])}
+
+        return {"m": flat_moment(self.opt_state["m"]),
+                "v": flat_moment(self.opt_state["v"]),
+                "count": self.opt_state["count"]}
+
+    def import_tenant_opt(self, tenant: int, opt: Dict[str, Any]) -> None:
+        """Install flat per-tenant moments (inverse of ``export_tenant_opt``;
+        ``count`` is shared ring state and is left untouched at T>1)."""
+        assert 0 <= tenant < self.T, (tenant, self.T)
+
+        def set_moment(cur, flat):
+            ad_stacked = pl.stack_entry(flat["adapter"], self.spans)
+            if self.T == 1:
+                return {"adapter": ad_stacked, "head": flat["head"]}
+            return {"adapter": jax.tree.map(
+                        lambda c, n: c.at[:, tenant].set(n),
+                        cur["adapter"], ad_stacked),
+                    "head": jax.tree.map(lambda c, n: c.at[tenant].set(n),
+                                         cur["head"], flat["head"])}
+
+        new = {"m": set_moment(self.opt_state["m"], opt["m"]),
+               "v": set_moment(self.opt_state["v"], opt["v"]),
+               "count": (opt["count"] if self.T == 1
+                         else self.opt_state["count"])}
+        self.opt_state = new
+
+    def load_canonical(self, params: Dict[str, Any]) -> None:
+        """Install a canonical tree from ``export_params()`` (T=1 single-model
+        or T>1 tenant-stacked) back into the live stage layout."""
+        if self.T == 1:
+            self.stage_blocks, self.shared = pl.stage_stack(
+                params, self.cfg, self.S, spans=self.spans)
+            self._params_rest = {k: v for k, v in params.items()
+                                 if k != "blocks"}
+            return
+        entry = params["blocks"][0]
+        bb_flat = {k: v for k, v in entry.items() if k != "adapter"}
+        self.stage_blocks = {
+            **pl.stack_entry(bb_flat, self.spans),
+            "adapter": self._stack_adapters(entry["adapter"], self.spans)}
+        self.shared = {k: params[k] for k in self.shared}
+        self._params_rest = {k: v for k, v in params.items()
+                             if k != "blocks"}

@@ -166,30 +166,41 @@ def is_ragged(spans: Sequence[Span]) -> bool:
     return len(set(span_sizes(spans))) > 1
 
 
-def stack_entry(entry: Any, spans: Sequence[Span]) -> Any:
+def stack_entry(entry: Any, spans: Sequence[Span], *, leading: int = 0) -> Any:
     """Flat block-entry tree (leaves [R, C, ...]) -> padded stage stack
     (leaves [S, max_span, C, ...]).  Uniform layouts keep the original
     zero-copy reshape; ragged layouts gather through ``span_maps`` (padding
-    rows duplicate the stage's last block and are masked in the forward)."""
+    rows duplicate the stage's last block and are masked in the forward).
+
+    ``leading`` extra axes before the block axis pass through untouched —
+    the multi-tenant executor stacks tenant-major ``[T, R, C, ...]`` adapter
+    trees with ``leading=1`` (-> ``[T, S, max_span, C, ...]``)."""
     S = len(spans)
+    lead = (slice(None),) * leading
     if not is_ragged(spans):
         lps = span_sizes(spans)[0]
         return jax.tree.map(
-            lambda x: x.reshape((S, lps) + x.shape[1:]), entry)
+            lambda x: x.reshape(x.shape[:leading] + (S, lps)
+                                + x.shape[leading + 1:]), entry)
     stack_idx, _, _, _ = span_maps(spans)
     idx = jnp.asarray(stack_idx)
-    return jax.tree.map(lambda x: x[idx], entry)
+    return jax.tree.map(lambda x: x[lead + (idx,)], entry)
 
 
-def unstack_entry(stacked: Any, spans: Sequence[Span]) -> Any:
+def unstack_entry(stacked: Any, spans: Sequence[Span], *,
+                  leading: int = 0) -> Any:
     """Inverse of :func:`stack_entry`: padded [S, max_span, C, ...] leaves ->
-    flat [R, C, ...] leaves (padding rows dropped)."""
+    flat [R, C, ...] leaves (padding rows dropped).  ``leading`` as in
+    :func:`stack_entry`."""
     R = spans[-1][1]
+    lead = (slice(None),) * leading
     if not is_ragged(spans):
-        return jax.tree.map(lambda x: x.reshape((R,) + x.shape[2:]), stacked)
+        return jax.tree.map(
+            lambda x: x.reshape(x.shape[:leading] + (R,)
+                                + x.shape[leading + 2:]), stacked)
     _, _, stage_of, slot_of = span_maps(spans)
     u, j = jnp.asarray(stage_of), jnp.asarray(slot_of)
-    return jax.tree.map(lambda x: x[u, j], stacked)
+    return jax.tree.map(lambda x: x[lead + (u, j)], stacked)
 
 
 def stage_stack(params: Dict[str, Any], cfg: ModelConfig, n_stages: int, *,
@@ -452,7 +463,7 @@ def ring_phase_a(cfg: ModelConfig, *, n_stages: int, boundary: int,
 
 def ring_phase_a_packed(cfg: ModelConfig, *, n_stages: int, boundary: int,
                         n_micro: int, spans: Optional[Sequence[Span]] = None,
-                        record=None):
+                        record=None, n_tenants: int = 1):
     """Packed-conveyor Phase A: ALL owners' boundary inputs in one pipeline.
 
     The per-owner ``ring_phase_a`` runs S independent ``M + F - 1``-tick
@@ -474,28 +485,55 @@ def ring_phase_a_packed(cfg: ModelConfig, *, n_stages: int, boundary: int,
     the conveyor length differs), emitted under ``stop_gradient``.  There is
     no ``owner`` argument — the executor indexes the stack inside its owner
     scan, and capture mode writes the whole stack to the cache in one pass.
+
+    Multi-tenant (``n_tenants=T > 1``): ``emb_g`` carries a tenant axis —
+    [S_owner, T, M, mb, seq, D] — and the pack axis extends from S owners to
+    T·S tenant-owners: one continuous ``T*S*M + F - 1``-tick conveyor moves
+    every tenant-owner microbatch of the round (slot ``t*S*M + o*M + m`` is
+    tenant t / owner o / microbatch m — tenant-major, i.e. tenant 0's PR-4
+    stream followed by tenant 1's, ...).  This is valid for the same reason
+    the single-tenant pack is: the trunk is frozen for the whole round AND
+    bit-identical across tenants (the stage-masked optimizer's frozen-region
+    invariant extends across the tenant axis — every tenant's frozen adapter
+    rows stay at their shared init), so nothing forces the T·S streams
+    apart.  Per-tick shapes are EXACTLY the single-tenant conveyor's
+    ([mb, seq, D] per stage), so each microbatch sees a bit-identical op
+    sequence to its own single-tenant run — only the conveyor length
+    differs; tests/test_tenants.py pins the joint-vs-independent oracle on
+    this.  Per tenant the round pays ``S*M + (F-1)/T`` ticks instead of
+    ``S*M + F - 1``: the fill/drain bubble is paid once across all T·S·M
+    microbatches (the amortization ``benchmarks/pipeline_bench.py`` gates).
+    Output: [S_owner, T, M, mb, seq, D].
     """
     S = n_stages
     spans, F = _ring_geometry(cfg, n_stages, boundary, spans)
     M = n_micro
+    T = n_tenants
     fwd_perm = [(i, (i + 1) % S) for i in range(S)]
 
     def phase_a_packed(my_blocks, emb_g):
         s = lax.axis_index("stage")
         valid = _stage_valid(spans, s)
-        seq = emb_g.shape[3]
-        mb = emb_g.shape[2]
-        pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (mb, seq))
+        seq = emb_g.shape[-2]
+        mb = emb_g.shape[-3]
+        pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None],
+                               (mb, seq))
 
         # Owner-major injection stream: conveyor slot o*M + m carries owner
-        # o's microbatch m.  ``emb_g`` is the all_gather'd (replicated)
-        # embedding stack and only the rel-0 stage of the tick pipeline ever
-        # reads its injection (``_tick_phase`` masks every other stage), so
-        # stage 0 reading ``emb_g[o, m]`` is exactly ``ring_phase_a``'s
-        # owner -> stage-0 dynamic permute for every owner at once.
-        inject = emb_g.reshape((S * M,) + emb_g.shape[2:])
+        # o's microbatch m (tenant-major ``t*S*M + o*M + m`` at T > 1).
+        # ``emb_g`` is the all_gather'd (replicated) embedding stack and only
+        # the rel-0 stage of the tick pipeline ever reads its injection
+        # (``_tick_phase`` masks every other stage), so stage 0 reading
+        # ``emb_g[o, m]`` is exactly ``ring_phase_a``'s owner -> stage-0
+        # dynamic permute for every owner at once.
+        if T == 1:
+            inject = emb_g.reshape((S * M,) + emb_g.shape[2:])
+        else:
+            # [S, T, M, mb, seq, D] -> [T, S, M, ...] -> [T*S*M, mb, seq, D]
+            e = jnp.swapaxes(emb_g, 0, 1)
+            inject = e.reshape((T * S * M,) + e.shape[3:])
         if F > 0:
-            outs = _tick_phase(cfg, s, pos, fwd_perm, S * M,
+            outs = _tick_phase(cfg, s, pos, fwd_perm, T * S * M,
                                lax.stop_gradient(my_blocks),
                                lax.stop_gradient(inject), 0, F,
                                valid, record)
@@ -503,7 +541,12 @@ def ring_phase_a_packed(cfg: ModelConfig, *, n_stages: int, boundary: int,
             h = lax.ppermute(outs, "stage", fwd_perm)      # stage F-1 -> F
         else:
             h = inject
-        return lax.stop_gradient(h.reshape((S, M) + emb_g.shape[2:]))
+        if T == 1:
+            out = h.reshape((S, M) + emb_g.shape[2:])
+        else:
+            out = jnp.swapaxes(
+                h.reshape((T, S, M) + emb_g.shape[3:]), 0, 1)
+        return lax.stop_gradient(out)
 
     return phase_a_packed
 

@@ -79,6 +79,7 @@ def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
                cache_capacity: Optional[int] = None,
                packed: bool = True, cache_dtype: str = "native",
                device_speeds: Optional[Any] = None,
+               tenants: int = 1, adapter_store: Optional[str] = None,
                save_path: Optional[str] = None, resume: Optional[str] = None,
                policy: Any = None, log=print) -> Dict[str, Any]:
     """Ring-pipeline training across ``n_stages`` devices — a shell over
@@ -100,10 +101,19 @@ def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
     block spans (Algorithm 1; the 4:5:2:3 example).  The resulting span
     layout is recorded in ``--save`` checkpoints and restored by
     ``--resume``.
+
+    ``tenants=T > 1`` (fused/cached) trains T per-tenant adapter sets over
+    one shared frozen trunk in a single joint conveyor; ``adapter_store``
+    exports every tenant's adapters+moments as named ``AdapterStore``
+    bundles (``tenant0``, ``tenant1``, ...) after the run — directly
+    hot-servable by ``launch/serve.py --adapter-store``.
     """
     if trainer not in ("fused", "reference"):
         raise ValueError(f"trainer must be 'fused' or 'reference', "
                          f"got {trainer!r}")
+    if tenants > 1 and trainer != "fused":
+        raise ValueError("--tenants > 1 needs the fused executor "
+                         "(--trainer fused)")
     if trainer == "reference":
         backend = "reference"
     else:
@@ -135,7 +145,7 @@ def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
                                   cache_capacity=cache_capacity,
                                   packed=packed, cache_dtype=cache_dtype,
                                   device_profiles=device_speeds,
-                                  log=log)
+                                  tenants=tenants, log=log)
         if device_speeds is not None:
             log(f"heterogeneous ring: speeds {list(device_speeds)} -> spans "
                 f"{[list(sp) for sp in sess.backend.spans]}")
@@ -144,6 +154,13 @@ def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
                        callbacks=[LoggingCallback(log, every=log_every)])
     if save_path:
         sess.save(save_path)
+    if adapter_store:
+        from repro.api import AdapterStore
+
+        store = AdapterStore(adapter_store)
+        for group in sess.tenants:
+            group.save_to(store, f"tenant{group.index}")
+        log(f"exported {sess.n_tenants} adapter bundle(s) to {adapter_store}")
     return {"history": history, "trainer": sess.backend.driver,
             "session": sess, "wall_s": time.time() - t0}
 
@@ -196,6 +213,16 @@ def main() -> None:
                          "'bf16' halves and 'int8' (per-row scales) quarters "
                          "the bytes per entry, fitting 2-4x more slots in "
                          "the same --cache-capacity memory budget")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="ring mode (fused/cached): train this many "
+                         "per-tenant adapter sets over ONE shared frozen "
+                         "trunk in a single joint conveyor; per tenant the "
+                         "result is bit-identical to an independent run")
+    ap.add_argument("--adapter-store", default=None,
+                    help="ring mode: export each tenant's trained adapters + "
+                         "Adam moments to this AdapterStore directory "
+                         "(entries tenant0, tenant1, ...) — servable by "
+                         "launch/serve.py --adapter-store without a restart")
     ap.add_argument("--device-speeds", default=None,
                     help="ring mode: comma-separated relative compute speeds, "
                          "one per stage in ring order (e.g. "
@@ -248,6 +275,8 @@ def main() -> None:
                          packed=not args.no_packed,
                          cache_dtype=args.cache_dtype,
                          device_speeds=speeds,
+                         tenants=args.tenants,
+                         adapter_store=args.adapter_store,
                          save_path=args.save, resume=args.resume)
     print(json.dumps(out["history"][-1], default=float))
 

@@ -21,7 +21,10 @@ bit-identical before and after the step, not merely "gradient-zero".
 
 Moments for the adapter stacks are kept *full-size* ``[R, ...]`` (pjit path) or
 stage-stacked ``[S, lps, ...]`` (ring path) so the optimizer-state pytree is
-stable while the unfreeze boundary moves.
+stable while the unfreeze boundary moves.  Multi-tenant rings add one interior
+tenant axis (``[S, T, lps, ...]`` adapters, ``[T, ...]`` head) via
+``tenant_stack`` — the update math is unchanged because ``leaf_update`` is
+elementwise and the stage mask broadcasts over the extra axis.
 """
 from __future__ import annotations
 
@@ -52,6 +55,21 @@ def init_moments(tree: Any) -> Tuple[Any, Any]:
     zeros = lambda t: jax.tree.map(
         lambda x: jnp.zeros(x.shape, jnp.float32), t)
     return zeros(tree), zeros(tree)
+
+
+def tenant_stack(tree: Any, n_tenants: int, *, axis: int = 0) -> Any:
+    """Tile every leaf with a tenant axis of size ``n_tenants`` at ``axis``.
+
+    The multi-tenant ring executor stacks adapters/moments per tenant and
+    runs ``tree_update`` on the stacked trees unchanged: ``leaf_update`` is
+    elementwise and the executor's scalar stage mask broadcasts over the
+    extra axis, so per-tenant updates are bit-identical to T independent
+    single-tenant updates.  All tenants start from the SAME initial values —
+    that shared init is what keeps frozen adapter rows bit-identical across
+    tenants (the frozen-region invariant the shared Phase-A trunk relies on).
+    """
+    return jax.tree.map(
+        lambda x: jnp.stack([x] * n_tenants, axis=axis), tree)
 
 
 def leaf_update(g: Array, m: Array, v: Array, p: Array, *, lr, tc: TrainConfig,

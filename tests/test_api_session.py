@@ -270,7 +270,7 @@ def test_pjit_session_matches_staged_recompile_oracle():
     f32 = lambda x: np.asarray(x, np.float32)
     err = max(float(np.abs(f32(a) - f32(b)).max()) for a, b in
               zip(jax.tree.leaves(params),
-                  jax.tree.leaves(sess.export_params())))
+                  jax.tree.leaves(sess.backend.export_params())))
     assert err < 1e-5, err
     assert hist[-1]["compile_count"] == len(step_fns)
 
@@ -341,11 +341,11 @@ with compat.set_mesh(mesh):
         assert mr["boundary"] == sr.boundary == mf["boundary"] == sf.boundary
         out["b"].append(sr.boundary)
     out["ref_param_err"] = maxerr(drv_ref.export_params(),
-                                  ses_ref.export_params())
+                                  ses_ref.backend.export_params())
     out["fused_param_err"] = maxerr(drv_fused.export_params(),
-                                    ses_fused.export_params())
-    out["cross_param_err"] = maxerr(ses_ref.export_params(),
-                                    ses_fused.export_params())
+                                    ses_fused.backend.export_params())
+    out["cross_param_err"] = maxerr(ses_ref.backend.export_params(),
+                                    ses_fused.backend.export_params())
     out["ses_fused_compiles"] = ses_fused.backend.compile_count
     out["ses_ref_compiles"] = ses_ref.backend.compile_count
 print(json.dumps(out))

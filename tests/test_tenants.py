@@ -1,0 +1,226 @@
+"""Multi-tenant personalization: joint T-tenant sessions vs solo oracles.
+
+Pins the tentpole contracts of the tenant-packed ring (core/pipeline.py
+``ring_phase_a_packed(n_tenants=T)`` + core/executor.py ``tenants=T`` +
+api/tenants.py):
+
+  (a) differential oracle — a joint T=4 cached session equals 4 independent
+      single-tenant sessions (each fed tenant k's stream via
+      ``RingDataSource(..., tenant=k)``) at the f32 pins (1e-5 losses /
+      1e-3 adapters), across a boundary drop.  The tenant conveyor chains
+      tenants on the TIME axis (T*S*M + F - 1 ticks, solo per-tick shapes),
+      so every microbatch runs the same op sequence as its solo run and the
+      match is in fact bit-exact,
+  (b) partitioned cache — reloading ONE tenant's adapters invalidates only
+      that tenant's (tenant, slot, boundary) entries: the neighbors' hit
+      counters keep climbing uninterrupted, and (since the reload writes
+      back the same values) the whole run stays loss-identical to an
+      untouched control,
+  (c) isolation — tenant i's losses are a function of tenant i's data only:
+      perturbing tenant j's stream leaves every other tenant's per-round
+      loss bit-unchanged under the shared frozen trunk,
+  (d) metrics flush — lazy device RoundMetrics held across a
+      ``session.repartition()`` are host-synced BEFORE the restack donates
+      the buffers they point at (satellite fix; without the flush the read
+      returns garbage or dies).
+"""
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_sub(code: str) -> dict:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+# f32 model: the differential pins compare adapter trees after Adam steps,
+# and bf16 rounding would swamp the 1e-3 adapter pin.
+PRELUDE = """
+import dataclasses, json
+import jax, jax.numpy as jnp
+from repro.configs import TrainConfig, get_config
+from repro.api import AdapterStore, RingSession
+from repro.api.data import RingDataSource
+
+S, M, mb, seq = 4, 2, 2, 8
+cfg = dataclasses.replace(
+    get_config("qwen2.5-3b").reduced(n_layers=8, repeats=8), dtype="float32")
+
+def make_tc(interval):
+    return TrainConfig(seed=0, learning_rate=1e-3, warmup_steps=1,
+                       unfreeze_interval=interval, initial_unfreeze_depth=4,
+                       n_stages=S, n_microbatches=M, batch_size=mb,
+                       seq_len=seq)
+
+f32 = lambda x: x.astype(jnp.float32)
+maxerr = lambda a, b: max(jax.tree.leaves(jax.tree.map(
+    lambda x, y: float(jnp.abs(f32(x) - f32(y)).max()), a, b)))
+"""
+
+
+def test_joint_matches_solos_across_boundary_drop():
+    """(a): T=4 joint cached session vs 4 independent solo sessions, with
+    the unfreeze boundary dropping mid-run (interval = 2 rounds' steps) —
+    per-round per-tenant losses at 1e-5, final adapter bundles at 1e-3."""
+    code = PRELUDE + """
+T, rounds = 4, 6
+tc = make_tc(2 * S)                       # one drop every 2 rounds
+joint = RingSession.create(cfg, tc, backend="cached", tenants=T,
+                           slots_per_epoch=2)
+hist = joint.run(rounds, log_every=1)
+out = {"joint": [[h["tenant_losses"][t] for h in hist] for t in range(T)],
+       "bounds": [h["boundary"] for h in hist],
+       "solo": [], "ad_err": [], "solo_bounds": None}
+for t in range(T):
+    solo = RingSession.create(cfg, tc, backend="cached", slots_per_epoch=2)
+    solo.data = RingDataSource(cfg, tc, S, slots_per_epoch=2, tenant=t)
+    h = solo.run(rounds, log_every=1)
+    out["solo"].append([r["loss"] for r in h])
+    out["solo_bounds"] = [r["boundary"] for r in h]
+    out["ad_err"].append(maxerr(joint.export_adapters(tenant=t),
+                                solo.export_adapters()))
+print(json.dumps(out))
+"""
+    res = _run_sub(code)
+    assert len(set(res["bounds"])) > 1, res["bounds"]       # drop happened
+    assert res["solo_bounds"] == res["bounds"]              # same schedule
+    for t in range(4):
+        for jl, sl in zip(res["joint"][t], res["solo"][t]):
+            assert abs(jl - sl) < 1e-5, (t, res)
+        assert res["ad_err"][t] < 1e-3, (t, res)
+    # the tenants actually train on distinct streams (losses differ)
+    assert len({tuple(r) for r in res["joint"]}) == 4
+
+
+def test_tenant_invalidation_leaves_neighbor_hit_rates(tmp_path):
+    """(b): after a warm cache (all tenants hitting), a round trip through
+    an AdapterStore into tenant 1 frees ONLY tenant 1's entries — the next
+    epoch re-captures tenant 1 while tenants 0/2 keep hitting — and the run
+    stays loss-identical to a control that never reloaded."""
+    code = (PRELUDE
+            + f"store_dir = {json.dumps(str(tmp_path / 'adstore'))}\n" + """
+T, tc = 3, make_tc(10**6)
+sess = RingSession.create(cfg, tc, backend="cached", tenants=T,
+                          slots_per_epoch=2)
+ctrl = RingSession.create(cfg, tc, backend="cached", tenants=T,
+                          slots_per_epoch=2)
+h1 = sess.run(4, log_every=1)             # capture x2, hit x2
+warm = (h1[-1]["tenant_cache_hits"], h1[-1]["tenant_cache_misses"])
+store = AdapterStore(store_dir)
+sess.tenants[1].save_to(store, "t1")
+sess.tenants[1].load_from(store, "t1")    # same values; frees tenant-1 rows
+inval = sess.backend.driver.cache.invalidations
+h2 = sess.run(4, log_every=1)             # t1 re-captures, 0/2 keep hitting
+cold = (h2[-1]["tenant_cache_hits"], h2[-1]["tenant_cache_misses"])
+hc = ctrl.run(8, log_every=1)
+out = {"warm_hits": warm[0], "warm_misses": warm[1],
+       "cold_hits": cold[0], "cold_misses": cold[1],
+       "inval": inval, "has_opt": store.has_opt("t1"),
+       "loss": [h["loss"] for h in h1 + h2],
+       "ctrl": [h["loss"] for h in hc]}
+print(json.dumps(out))
+""")
+    res = _run_sub(code)
+    # warm: 2 capture rounds (miss each tenant) then 2 all-hit rounds
+    assert res["warm_hits"] == [2, 2, 2] and res["warm_misses"] == [2, 2, 2]
+    assert res["inval"] == 1 and res["has_opt"]
+    # post-reload epoch: tenant 1 misses both slots, neighbors hit through —
+    # then the final epoch is all-hit again
+    assert res["cold_hits"] == [6, 4, 6], res
+    assert res["cold_misses"] == [2, 4, 2], res
+    # reloading identical values must not perturb training
+    for a, b in zip(res["loss"], res["ctrl"]):
+        assert a == b, res
+
+
+def test_tenant_isolation():
+    """(c): perturb tenant 2's data stream (different seed) — tenants 0/1
+    see bit-identical per-round losses, tenant 2 diverges."""
+    code = PRELUDE + """
+T, tc = 3, make_tc(10**6)
+a = RingSession.create(cfg, tc, backend="fused", tenants=T)
+b = RingSession.create(cfg, tc, backend="fused", tenants=T)
+tc2 = dataclasses.replace(tc, seed=1234)
+b.data.rbs[2] = RingDataSource(cfg, tc2, S, tenants=T).rbs[2]
+ha = a.run(4, log_every=1)
+hb = b.run(4, log_every=1)
+out = {"a": [[h["tenant_losses"][t] for h in ha] for t in range(T)],
+       "b": [[h["tenant_losses"][t] for h in hb] for t in range(T)]}
+print(json.dumps(out))
+"""
+    res = _run_sub(code)
+    assert res["a"][0] == res["b"][0]          # bit-equal: untouched tenants
+    assert res["a"][1] == res["b"][1]
+    assert res["a"][2] != res["b"][2]          # the perturbed one moved
+
+
+def test_metrics_flushed_before_repartition():
+    """(d): a lazy RoundMetrics held across ``session.repartition`` is
+    host-synced by the flush (materialized, finite, and equal to the value
+    an immediately-materialized control read), and training continues on
+    the new layout with unchanged numerics."""
+    code = PRELUDE + """
+T, tc = 2, make_tc(10**6)
+sess = RingSession.create(cfg, tc, backend="fused", tenants=T)
+ctrl = RingSession.create(cfg, tc, backend="fused", tenants=T)
+m = sess.step()                           # lazy: loss is a device array
+mc = ctrl.step().materialize()
+was_lazy = not m.materialized
+# 2:2:2:2 -> 3:1:2:2 keeps a span edge at repeat 4, so the span-aligned
+# unfreeze boundary (initial depth 4) is unchanged and numerics must hold
+sess.repartition([3, 1, 2, 2])            # donates the old stacks
+out = {"was_lazy": was_lazy, "flushed": m.materialized,
+       "loss": m.loss, "ctrl_loss": mc.loss,
+       "tl": m.extras["tenant_losses"],
+       "ctrl_tl": mc.extras["tenant_losses"],
+       "next_loss": sess.step().materialize().loss,
+       "ctrl_next": ctrl.step().materialize().loss,
+       "spans": [list(sp) for sp in sess.backend.spans]}
+print(json.dumps(out))
+"""
+    res = _run_sub(code)
+    assert res["was_lazy"] and res["flushed"]
+    assert res["loss"] == res["ctrl_loss"]      # flushed pre-donation bits
+    assert res["tl"] == res["ctrl_tl"]
+    assert res["spans"] == [[0, 3], [3, 4], [4, 6], [6, 8]]
+    # repartition preserves numerics (restack is exact)
+    assert abs(res["next_loss"] - res["ctrl_next"]) < 1e-5
+
+
+def test_deprecated_persistence_shims_warn(tmp_path):
+    """Satellite: ``export_params``/``load`` survive as thin shims over the
+    canonical ``backend.export_params()`` / ``_load_into`` — each warns once
+    and delegates (in-process: the pjit backend runs on one device)."""
+    import warnings
+
+    import jax
+    import pytest
+
+    from repro.api import RingSession
+    from repro.configs import TrainConfig, get_config
+
+    cfg = get_config("stablelm-3b").reduced(n_layers=4, repeats=4,
+                                            d_model=128, d_ff=256)
+    tc = TrainConfig(learning_rate=1e-3, batch_size=1, seq_len=16)
+    sess = RingSession.create(cfg, tc, backend="pjit")
+    with pytest.warns(DeprecationWarning, match="export_params"):
+        old = sess.export_params()
+    canonical = sess.backend.export_params()
+    assert jax.tree.structure(old) == jax.tree.structure(canonical)
+    path = str(tmp_path / "ck")
+    sess.save(path)
+    with pytest.warns(DeprecationWarning, match="restore"):
+        sess.load(path)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # canonical path: no warning
+        RingSession.restore(path, cfg, tc)
