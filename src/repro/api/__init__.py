@@ -7,7 +7,10 @@ structured :class:`~repro.api.metrics.RoundMetrics`, and checkpoints the
 complete resumable state.  See each module's docstring for the protocol
 contracts (monotone boundary, donation, cache invalidation).
 """
-from .backends import (CachedBackend, FusedBackend, PjitBackend,
+from repro.core.elastic import StragglerDetector, parse_chaos_events
+from repro.core.simulator import ChurnEvent
+
+from .backends import (CachedBackend, ChaosBackend, FusedBackend, PjitBackend,
                        ReferenceBackend)
 from .data import PjitDataSource, RingDataSource
 from .metrics import (BenchCaptureCallback, Callback, CheckpointCallback,
@@ -20,6 +23,7 @@ from .tenants import AdapterStore, TenantGroup
 __all__ = [
     "RingSession", "BACKENDS",
     "ReferenceBackend", "FusedBackend", "CachedBackend", "PjitBackend",
+    "ChaosBackend", "ChurnEvent", "StragglerDetector", "parse_chaos_events",
     "IntervalPolicy", "ExplicitPolicy", "LossPlateauPolicy", "resolve_policy",
     "RoundMetrics", "Callback", "LoggingCallback", "CheckpointCallback",
     "BenchCaptureCallback",

@@ -46,17 +46,21 @@ moments across families.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import compat
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.core import pipeline as pl
 from repro.core import training
-from repro.core.partition import (parse_device_profiles, span_sizes,
-                                  spans_from_profiles, uniform_assignment)
+from repro.core.elastic import StragglerDetector
+from repro.core.partition import (DeviceProfile, parse_device_profiles,
+                                  span_sizes, spans_from_profiles,
+                                  uniform_assignment)
+from repro.core.simulator import ChurnEvent
 from repro.core.unfreeze import depth_to_boundary
 from repro.models import params as prm
 from repro.optim import adamw
@@ -200,6 +204,29 @@ class _RingBackendBase:
                 f"backend {self.name!r} cannot repartition mid-run")
         d.repartition(pl.resolve_spans(self.cfg.repeats, self.S, spans))
         self.spans = d.spans
+
+    def shrink(self, dead_stage: int, *, spans=None, profiles=None) -> None:
+        """Live S -> S-1 shrink (executor-backed backends only): drop stage
+        ``dead_stage`` and reassign its span over the survivors.  The caller
+        flushes pending device metrics first — the restack donates the
+        buffers they point at."""
+        d = self.driver
+        if not hasattr(d, "shrink"):
+            raise NotImplementedError(
+                f"backend {self.name!r} cannot shrink mid-run — use "
+                f"backend='fused' or 'cached'")
+        d.shrink(dead_stage, spans=spans, profiles=profiles)
+        self.S, self.mesh, self.spans = d.S, d.mesh, d.spans
+
+    def grow(self, profile=None, *, spans=None, profiles=None) -> None:
+        """Inverse of ``shrink``: a device joins, S grows by one."""
+        d = self.driver
+        if not hasattr(d, "grow"):
+            raise NotImplementedError(
+                f"backend {self.name!r} cannot grow mid-run — use "
+                f"backend='fused' or 'cached'")
+        d.grow(profile, spans=spans, profiles=profiles)
+        self.S, self.mesh, self.spans = d.S, d.mesh, d.spans
 
 
 class ReferenceBackend(_RingBackendBase):
@@ -447,3 +474,199 @@ class PjitBackend:
         self._params = params
         self._opt = opt
         self._step = step
+
+
+class ChaosBackend:
+    """Fault-injection + elasticity wrapper over a ring backend.
+
+    Wraps any executor-backed ring backend and, per ``step``:
+
+      1. fires every pending :class:`~repro.core.simulator.ChurnEvent` whose
+         round has arrived (``round=3`` means rounds 0-2 ran on the old
+         fleet) — a ``crash``/``leave`` shrinks the inner ring live (with
+         ``elastic=True``; without it the crash raises, which is exactly
+         what the un-wrapped ring would do by stalling), a ``slowdown``
+         degrades that device's ground-truth speed, a ``join`` reclaims a
+         previously-dead device's slot;
+      2. trims the round's ``[S0, ...]`` batch to the survivors' original
+         rows (the data source keeps producing at the original ring size,
+         which is what makes save -> resume bit-reproducible across a
+         shrink);
+      3. delegates to the inner backend;
+      4. synthesizes per-stage wall times from the ground-truth speeds
+         (``span_size / speed`` — the SPMD tick model; real deployments
+         would use measured stage timings) into ``extras["stage_times"]``;
+      5. with ``elastic=True``, feeds those timings to a
+         :class:`~repro.core.elastic.StragglerDetector` and applies its
+         (hysteresis-gated) repartition proposal.
+
+    Any round that changed the ring layout is flagged
+    ``raw["layout_changed"]`` so the session can re-seed its monotone-
+    boundary check and suspend plateau policies for the blip.  Everything
+    else (``state``/``load_state``/``format``/``export_params``/...)
+    delegates to the inner backend untouched.
+    """
+
+    def __init__(self, inner, *, events: Sequence[ChurnEvent] = (),
+                 elastic: bool = False, device_profiles=None, log=print):
+        self.inner = inner
+        self.elastic = elastic
+        self.log = log
+        self.events: List[ChurnEvent] = sorted(events, key=lambda e: e.round)
+        if device_profiles is not None:
+            profs = parse_device_profiles(device_profiles)
+            if len(profs) != inner.S:
+                raise ValueError(
+                    f"{len(profs)} device profiles for a {inner.S}-stage "
+                    f"ring")
+        else:
+            profs = [DeviceProfile(1.0, float("inf"))
+                     for _ in range(inner.S)]
+        # keyed by ORIGINAL device index — survivors map stage -> original
+        self.profiles: Dict[int, DeviceProfile] = dict(enumerate(profs))
+        self.speeds: Dict[int, float] = {
+            i: p.compute_speed for i, p in self.profiles.items()}
+        self.survivors: List[int] = list(range(inner.S))
+        self.detector: Optional[StragglerDetector] = (
+            StragglerDetector(profs, inner.cfg.repeats) if elastic else None)
+        self.flush_hook = None              # session assigns: flush metrics
+        self.round_idx = 0
+        self.shrinks = 0
+        self.repartitions = 0
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def _flush(self) -> None:
+        if self.flush_hook is not None:
+            self.flush_hook()
+
+    def _survivor_profiles(self) -> List[DeviceProfile]:
+        if self.detector is not None:
+            return self.detector.fleet      # EWMA-refit speeds
+        return [self.profiles[d] for d in self.survivors]
+
+    def _apply(self, ev: ChurnEvent) -> bool:
+        """Fire one event against the live ring; True if the layout moved."""
+        if ev.kind in ("crash", "leave"):
+            if ev.device not in self.survivors:
+                raise ValueError(
+                    f"churn {ev.kind} targets device {ev.device}, which is "
+                    f"not alive (survivors: {self.survivors})")
+            if not self.elastic:
+                raise RuntimeError(
+                    f"device {ev.device} {'crashed' if ev.kind == 'crash' else 'left'} "
+                    f"at round {self.round_idx} and the ring is not elastic "
+                    f"— run with elastic=True (--elastic) to shrink and "
+                    f"continue")
+            stage = self.survivors.index(ev.device)
+            self._flush()
+            self.survivors.pop(stage)
+            if self.detector is not None:
+                self.detector.remove(stage)
+            old = [list(sp) for sp in self.inner.spans]
+            self.inner.shrink(stage, profiles=self._survivor_profiles())
+            self.shrinks += 1
+            self.log(f"[elastic] device {ev.device} {ev.kind} at round "
+                     f"{self.round_idx}: ring {len(self.survivors) + 1} -> "
+                     f"{len(self.survivors)} stages, spans {old} -> "
+                     f"{[list(sp) for sp in self.inner.spans]} "
+                     f"(cache re-captures next round)")
+            return True
+        if ev.kind == "slowdown":
+            if ev.device not in self.survivors:
+                raise ValueError(
+                    f"churn slowdown targets device {ev.device}, which is "
+                    f"not alive (survivors: {self.survivors})")
+            self.speeds[ev.device] /= ev.factor
+            self.log(f"[elastic] device {ev.device} slowed {ev.factor}x at "
+                     f"round {self.round_idx}"
+                     + ("" if self.elastic else
+                        " (not elastic: the ring will limp, not repartition)"))
+            return False                    # detector discovers it from timings
+        # join: only a previously-dead device's slot can be reclaimed — the
+        # data source still owns exactly S0 rows, so a genuinely new device
+        # would have no data stream to serve.
+        if ev.device in self.survivors:
+            raise ValueError(f"churn join: device {ev.device} is already "
+                             f"in the ring")
+        if ev.device not in self.profiles:
+            raise ValueError(
+                f"churn join: device {ev.device} was never part of the "
+                f"original fleet — only rejoining devices are supported "
+                f"(the data source owns the original rows)")
+        if not self.elastic:
+            raise RuntimeError(
+                f"device {ev.device} rejoined at round {self.round_idx} and "
+                f"the ring is not elastic — run with elastic=True (--elastic)")
+        prof = ev.profile or self.profiles[ev.device]
+        stage = sum(1 for d in self.survivors if d < ev.device)
+        self._flush()
+        self.survivors.insert(stage, ev.device)
+        if self.detector is not None:
+            self.detector.insert(stage, prof)
+        self.inner.grow(profiles=self._survivor_profiles())
+        self.log(f"[elastic] device {ev.device} rejoined at round "
+                 f"{self.round_idx}: ring {len(self.survivors) - 1} -> "
+                 f"{len(self.survivors)} stages, spans "
+                 f"{[list(sp) for sp in self.inner.spans]}")
+        return True
+
+    def step(self, batch) -> Dict[str, Any]:
+        layout_changed = False
+        while self.events and self.events[0].round <= self.round_idx:
+            layout_changed |= self._apply(self.events.pop(0))
+        if len(self.survivors) != len(self.profiles):
+            rows = np.asarray(self.survivors)
+            if len(batch) == 3:
+                slot, tokens, labels = batch
+                batch = (slot, tokens[rows], labels[rows])
+            else:
+                tokens, labels = batch
+                batch = (tokens[rows], labels[rows])
+        raw = self.inner.step(batch)
+        stage_times = [(e - b) / self.speeds[dev] for (b, e), dev
+                       in zip(self.inner.spans, self.survivors)]
+        extras = raw.setdefault("extras", {})
+        extras["stage_times"] = stage_times
+        extras["survivors"] = list(self.survivors)
+        if self.detector is not None:
+            self.detector.observe(self.inner.spans, stage_times)
+            prop = self.detector.propose(self.inner.spans)
+            if prop is not None:
+                self._flush()
+                old = [list(sp) for sp in self.inner.spans]
+                self.inner.repartition(prop)
+                self.repartitions += 1
+                layout_changed = True
+                self.log(f"[elastic] straggler repartition at round "
+                         f"{self.round_idx}: spans {old} -> "
+                         f"{[list(sp) for sp in self.inner.spans]} "
+                         f"(EWMA speeds "
+                         f"{[round(s, 3) for s in self.detector.speeds]})")
+        if layout_changed:
+            raw["layout_changed"] = True
+            extras["layout_changed"] = True
+        self.round_idx += 1
+        return raw
+
+    def restore_membership(self, survivors: Sequence[int],
+                           spans=None) -> None:
+        """Replay a checkpoint's saved fleet state onto a freshly-built
+        full-size ring: shrink away every device missing from ``survivors``
+        (in stage order), then repartition to the exact saved ``spans`` —
+        run BEFORE ``load_state`` so the stage-stacked moments land on the
+        right geometry."""
+        for dead in [d for d in list(self.survivors) if d not in survivors]:
+            stage = self.survivors.index(dead)
+            self.survivors.pop(stage)
+            if self.detector is not None:
+                self.detector.remove(stage)
+            self.inner.shrink(stage, profiles=self._survivor_profiles())
+            self.shrinks += 1
+        if list(survivors) != self.survivors:
+            raise ValueError(
+                f"saved survivors {list(survivors)} are not a subset of the "
+                f"original fleet {sorted(self.profiles)}")
+        if spans is not None:
+            self.inner.repartition(spans)

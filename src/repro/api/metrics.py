@@ -134,9 +134,16 @@ class LoggingCallback(Callback):
         acc = "" if acc is None else f" acc/f1={acc:.3f}"
         tps = d.get("tokens_per_sec")
         tps = "" if tps is None else f" {tps:,.0f} tok/s"
+        # a round that shrank/grew/repartitioned the ring gets a marker so
+        # the loss blip right after it reads as recovery, not divergence
+        el = ""
+        if d.get("layout_changed"):
+            surv = d.get("survivors")
+            el = (" [elastic]" if surv is None
+                  else f" [elastic S={len(surv)}]")
         self.log(f"step {d['step']:5d} b={d['boundary']:2d} "
                  f"d={d['depth']:2d} loss={d['loss']:.4f}"
-                 f"{acc}{cache}{tps} ({d.get('wall_s')}s)")
+                 f"{acc}{cache}{tps}{el} ({d.get('wall_s')}s)")
 
     def on_round(self, session, m: RoundMetrics) -> None:
         self._n += 1

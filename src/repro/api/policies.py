@@ -152,12 +152,23 @@ class LossPlateauPolicy:
         self._best: Optional[float] = None
         self._bad = 0                    # consecutive no-improvement count
         self._since_unfreeze = 0         # observations since the last bump
+        self._suspended = 0              # observations to skip (recovery blips)
 
     def depth_at(self, step: int, n_blocks: int) -> int:
         cap = min(self.max_depth or n_blocks, n_blocks)
         return min(self._depth, cap)
 
+    def suspend(self, rounds: int = 1) -> None:
+        """Skip the next ``rounds`` observations.  The session calls this
+        after an elastic layout change: a recovery round's loss blip (new
+        span alignment, re-captured cache) is a geometry artifact, not
+        plateau evidence — counting it would bias the unfreeze schedule."""
+        self._suspended = max(self._suspended, int(rounds))
+
     def observe(self, step: int, loss: float) -> None:
+        if self._suspended > 0:
+            self._suspended -= 1
+            return
         self._since_unfreeze += 1
         if loss is not None and math.isfinite(loss):
             self._ema = (loss if self._ema is None
@@ -178,7 +189,8 @@ class LossPlateauPolicy:
 
     def state(self) -> Dict:
         return {"depth": self._depth, "ema": self._ema, "best": self._best,
-                "bad": self._bad, "since_unfreeze": self._since_unfreeze}
+                "bad": self._bad, "since_unfreeze": self._since_unfreeze,
+                "suspended": self._suspended}
 
     def load_state(self, state: Dict) -> None:
         self._depth = int(state["depth"])
@@ -186,6 +198,8 @@ class LossPlateauPolicy:
         self._best = state["best"]
         self._bad = int(state["bad"])
         self._since_unfreeze = int(state["since_unfreeze"])
+        # pre-elastic checkpoints have no "suspended" key
+        self._suspended = int(state.get("suspended", 0))
 
     def __repr__(self):
         return (f"LossPlateauPolicy(depth={self._depth}, "

@@ -43,8 +43,11 @@ from typing import Any, Dict, List, Optional, Sequence
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.elastic import parse_chaos_events
+from repro.core.partition import parse_device_profiles, spans_from_profiles
+from repro.core.simulator import ChurnEvent
 
-from .backends import (CachedBackend, FusedBackend, PjitBackend,
+from .backends import (CachedBackend, ChaosBackend, FusedBackend, PjitBackend,
                        ReferenceBackend)
 from .data import PjitDataSource, RingDataSource
 from .metrics import Callback, RoundMetrics
@@ -72,6 +75,11 @@ class RingSession:
         # flushed (host-synced in place) before any donation-invalidating
         # backend call (repartition / load), see flush_metrics()
         self._live_metrics: "weakref.WeakSet[RoundMetrics]" = weakref.WeakSet()
+        # an elastic (chaos-wrapped) backend shrinks/repartitions INSIDE its
+        # step() — it must flush pending device metrics first, and only the
+        # session knows which ones are live
+        if hasattr(backend, "flush_hook"):
+            backend.flush_hook = self.flush_metrics
 
     # ------------------------------------------------------------------
     @classmethod
@@ -83,7 +91,7 @@ class RingSession:
                packed: bool = True, cache_dtype: str = "native",
                impl: str = "jnp", params: Optional[Dict[str, Any]] = None,
                spans: Any = None, device_profiles: Any = None,
-               tenants: int = 1,
+               tenants: int = 1, elastic: bool = False, chaos: Any = (),
                data: Any = None, callbacks: Sequence[Callback] = (),
                log=print) -> "RingSession":
         """Wire a session from names: backend in {'pjit', 'reference',
@@ -155,17 +163,37 @@ class RingSession:
                     "slots_per_epoch (for the default data source) or a "
                     "slot-yielding data= — with streaming draws every round "
                     "would silently bypass the cache (0% hits)")
+        S0 = getattr(be, "S", S)           # pre-churn ring size
+        if elastic or chaos:
+            if be.kind == "pjit":
+                raise ValueError(
+                    "elastic/chaos is a ring feature — the pjit baseline has "
+                    "no span layout to shrink or repartition")
+            specs = [chaos] if isinstance(chaos, (str, ChurnEvent)) \
+                else list(chaos)
+            events = (list(parse_chaos_events(
+                          [e for e in specs if isinstance(e, str)]))
+                      + [e for e in specs if isinstance(e, ChurnEvent)])
+            be = ChaosBackend(be, events=events, elastic=elastic,
+                              device_profiles=device_profiles, log=log)
         if data is None:
+            # an elastic ring keeps the ORIGINAL fanout: the source always
+            # yields S0 client rows and ChaosBackend trims to survivors, so
+            # the data cursor (and save -> resume) is churn-independent
             data = (PjitDataSource(cfg, tc) if be.kind == "pjit"
-                    else RingDataSource(cfg, tc, getattr(be, "S", S),
+                    else RingDataSource(cfg, tc, S0,
                                         slots_per_epoch=slots_per_epoch,
                                         tenants=tenants))
         be_spans = getattr(be, "spans", None)
-        create_args = {"backend": be.name, "n_stages": getattr(be, "S", None),
+        create_args = {"backend": be.name,
+                       # the ORIGINAL ring size: an elastic session's data
+                       # source (and restore) is anchored to it even after
+                       # churn shrinks the live ring below it
+                       "n_stages": S0 if be.kind != "pjit" else None,
                        "slots_per_epoch": slots_per_epoch,
                        "cache_capacity": cache_capacity, "impl": impl,
                        "packed": packed, "cache_dtype": cache_dtype,
-                       "tenants": tenants,
+                       "tenants": tenants, "elastic": elastic,
                        # span layout rides in the checkpoint so restore
                        # rebuilds the same heterogeneous partition (JSON:
                        # list of [begin, end] pairs)
@@ -193,6 +221,22 @@ class RingSession:
         if batch is None:
             batch = self.data.next()
         raw = self.backend.step(batch)
+        if raw.get("layout_changed"):
+            # an elastic shrink/grow/repartition happened INSIDE the step:
+            # span edges (and so boundary alignment granularity) moved, so
+            # the monotone check re-seeds from this round's boundary, the
+            # checkpointed layout/membership follow the live ring, and a
+            # plateau policy skips the recovery blip (geometry artifact,
+            # not training signal)
+            self._last_boundary = None
+            be_spans = getattr(self.backend, "spans", None)
+            self._create_args["spans"] = ([list(sp) for sp in be_spans]
+                                          if be_spans is not None else None)
+            surv = getattr(self.backend, "survivors", None)
+            if surv is not None:
+                self._create_args["survivors"] = list(surv)
+            if hasattr(self.policy, "suspend"):
+                self.policy.suspend(1)
         boundary = raw["boundary"]
         if self._last_boundary is not None and boundary > self._last_boundary:
             raise RuntimeError(
@@ -368,24 +412,63 @@ class RingSession:
 
     @classmethod
     def restore(cls, path: str, cfg: ModelConfig, tc: TrainConfig, *,
-                policy: Any = None, backend: Any = None,
+                policy: Any = None, backend: Any = None, log=print,
                 **create_kwargs) -> "RingSession":
         """Rebuild a session from a checkpoint.  Backend/shape arguments
         default to what the checkpoint recorded; the policy must be supplied
-        with the same type it was saved with (its host state is restored)."""
+        with the same type it was saved with (its host state is restored).
+
+        A checkpoint saved AFTER an elastic shrink records the surviving
+        original-device indices; restore rebuilds the ring at the original
+        size, replays the membership (shrinking away the dead stages and
+        repartitioning to the saved spans) and only then loads — so the
+        stage-stacked moments land on the exact geometry they were saved
+        from, with no checkpoint-format special case.
+
+        Restoring with ``elastic=True`` and ``device_profiles`` describing a
+        fleet whose Algorithm-1 layout differs from the checkpoint's spans
+        does not abort: the saved layout is loaded first (moments are laid
+        out per span), then the ring repartitions live to the fleet's layout.
+        """
         with open(path + ".json") as f:
             meta = json.load(f)
         ex = meta["extra"]
         if backend is None:
             backend = ex.get("backend", "fused")
         for k in ("n_stages", "slots_per_epoch", "cache_capacity", "impl",
-                  "packed", "cache_dtype", "spans", "tenants"):
+                  "packed", "cache_dtype", "spans", "tenants", "elastic"):
             if k in ex and ex[k] is not None:
                 create_kwargs.setdefault(k, ex[k])
         if backend == "pjit":
             # a ring checkpoint's span layout means nothing to pjit; let the
             # format-mismatch check produce the real diagnostic
             create_kwargs.pop("spans", None)
-        sess = cls.create(cfg, tc, backend=backend, policy=policy,
+        surv = ex.get("survivors")
+        saved_spans = create_kwargs.get("spans")
+        if surv is not None and len(surv) < int(ex.get("n_stages") or 0):
+            # post-shrink checkpoint: build at the original size with the
+            # default layout (the saved spans describe the SHRUNK ring and
+            # would mis-size an S0 build), then replay the membership
+            create_kwargs.pop("spans", None)
+            create_kwargs["elastic"] = True
+        sess = cls.create(cfg, tc, backend=backend, policy=policy, log=log,
                           **create_kwargs)
-        return sess._load_into(path)
+        if surv is not None and len(surv) < int(ex.get("n_stages") or 0):
+            sess.backend.restore_membership(surv, spans=saved_spans)
+            sess._create_args["spans"] = saved_spans
+            sess._create_args["survivors"] = list(surv)
+        sess._load_into(path)
+        if create_kwargs.get("elastic") \
+                and create_kwargs.get("device_profiles") is not None:
+            profs = parse_device_profiles(create_kwargs["device_profiles"])
+            live = getattr(sess.backend, "spans", None)
+            if live is not None and len(profs) == len(live):
+                desired = [list(sp) for sp in
+                           spans_from_profiles(cfg.repeats, profs)]
+                if desired != [list(sp) for sp in live]:
+                    log(f"[elastic] checkpoint layout "
+                        f"{[e - b for b, e in live]} is stale for the given "
+                        f"fleet -> repartitioning to "
+                        f"{[e - b for b, e in desired]}")
+                    sess.repartition(desired)
+        return sess

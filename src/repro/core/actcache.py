@@ -310,6 +310,34 @@ class ActivationCache:
         return n
 
     # ------------------------------------------------------------------
+    def rebind(self, *, sharding: Optional[Any] = None, layout: Any) -> int:
+        """Re-home the cache after a ring-geometry change (shrink/grow).
+
+        ``set_layout`` handles same-S repartitions (the buffer's shapes
+        survive, only the keys die), but a shrink/grow changes S and the
+        entry shape itself carries S (``[S_stage, S_owner, M, mb, seq, D]``)
+        AND the buffer's sharding mesh — so the allocation cannot be reused.
+        Drops the buffer, writer, and shape/dtype bindings (the next ``put``
+        re-allocates at the new geometry under ``sharding``) while KEEPING
+        the hit/miss/eviction counters: recovery hit-rate accounting spans
+        the shrink.  Returns the number of entries dropped; counts one
+        invalidation event if any were live.
+        """
+        n = len(self._rows)
+        self._rows.clear()
+        self._free = list(range(self.capacity - 1, -1, -1))
+        if n:
+            self.invalidations += 1
+        self.sharding = sharding if sharding is not None else self.sharding
+        self.layout = layout
+        self._buf = None
+        self._scales = None
+        self._writer = None
+        self._entry_shape = None
+        self._src_dtype = None
+        return n
+
+    # ------------------------------------------------------------------
     def invalidate_tenant(self, tenant: Hashable) -> int:
         """Drop only the entries whose key's FIRST component is ``tenant``.
 

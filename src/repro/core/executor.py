@@ -81,6 +81,7 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -89,7 +90,8 @@ from repro.configs.base import ModelConfig, TrainConfig
 from repro.core import actcache
 from repro.core import pipeline as pl
 from repro.core.actcache import ActivationCache
-from repro.core.partition import Span, align_boundary, frozen_stage_count
+from repro.core.partition import (DeviceProfile, Span, align_boundary,
+                                  frozen_stage_count, spans_from_profiles)
 from repro.core.unfreeze import UnfreezeSchedule, depth_to_boundary
 from repro.optim import adamw
 
@@ -829,6 +831,120 @@ class RingExecutor:
         if self.cache is not None:
             self.cache.set_layout(new)
         self._last_boundary = None
+
+    # ------------------------------------------------------------------
+    # elastic membership: live S -> S-1 shrink / S -> S+1 grow
+    # ------------------------------------------------------------------
+
+    def _resolve_new_spans(self, new_S: int,
+                           spans: Optional[Sequence[Span]],
+                           profiles: Optional[Sequence[DeviceProfile]]
+                           ) -> Tuple[Span, ...]:
+        R = self.cfg.repeats
+        if R < new_S:
+            raise ValueError(
+                f"cannot run {new_S} stages over {R} blocks")
+        if spans is not None:
+            return pl.resolve_spans(R, new_S, spans)
+        if profiles is not None:
+            if len(profiles) != new_S:
+                raise ValueError(
+                    f"got {len(profiles)} profiles for a {new_S}-stage ring")
+            return spans_from_profiles(R, list(profiles))
+        return pl.resolve_spans(R, new_S, None)
+
+    def _regeometry(self, new_S: int, new_spans: Tuple[Span, ...]) -> None:
+        """Rebuild the executor at a new ring size in place.
+
+        Everything the ring holds is round-trips through its canonical
+        (unstacked, host) form: params via ``export_params`` /
+        ``load_canonical``, Adam moments via the flat entry form — the same
+        exact restack ``repartition`` does, plus a mesh change.  The host
+        hop (``np.asarray``) detaches every leaf from the old mesh's
+        sharding so the rebuilt stacks place cleanly on the new one.  The
+        activation cache is REBOUND, not restored: entry shapes carry S, so
+        the old buffer cannot be reused — the next round's capture
+        executable refills it (checkpoint-free recovery).  Counters /
+        trace histories survive; executables and tick ledgers do not (the
+        geometry they were traced for is gone).
+        """
+        host = lambda t: jax.tree.map(np.asarray, t)
+        old = self.spans
+        params = host(self.export_params(None if self.T > 1 else 0))
+        if self.T == 1:
+            m_ad = host(pl.unstack_entry(self.opt_state["m"]["adapter"], old))
+            v_ad = host(pl.unstack_entry(self.opt_state["v"]["adapter"], old))
+        else:
+            m_ad = host(self._unstack_adapters(
+                self.opt_state["m"]["adapter"], old))
+            v_ad = host(self._unstack_adapters(
+                self.opt_state["v"]["adapter"], old))
+        m_hd = host(self.opt_state["m"]["head"])
+        v_hd = host(self.opt_state["v"]["head"])
+        count = np.asarray(self.opt_state["count"])
+
+        self.S = new_S
+        self.mesh = compat.make_mesh((new_S,), ("stage",))
+        self.spans = new_spans
+        self.lps = (self.cfg.repeats // new_S
+                    if not pl.is_ragged(new_spans) else None)
+        self.load_canonical(params)
+        stack = ((lambda t: pl.stack_entry(t, new_spans)) if self.T == 1
+                 else (lambda t: self._stack_adapters(t, new_spans)))
+        self.opt_state = {"m": {"adapter": stack(m_ad), "head": m_hd},
+                          "v": {"adapter": stack(v_ad), "head": v_hd},
+                          "count": jnp.asarray(count)}
+        self._fns.clear()
+        self.tick_scan_lens.clear()
+        if self.cache is not None:
+            self.cache.rebind(
+                sharding=NamedSharding(self.mesh, P(None, "stage")),
+                layout=new_spans)
+        self._last_boundary = None
+
+    def shrink(self, dead_stage: int, *,
+               spans: Optional[Sequence[Span]] = None,
+               profiles: Optional[Sequence[DeviceProfile]] = None) -> None:
+        """Degraded S-1 operation after stage ``dead_stage`` dies.
+
+        The dead device's span is reassigned over the survivors — via
+        explicit ``spans``, via ``spans_from_profiles`` over the survivors'
+        ``profiles``, or the balanced split.  Nothing is lost to the crash:
+        adapters and Adam moments are stage-stacked but every stage's rows
+        are recoverable from the canonical round-trip (the donated stacks
+        replicate the flat entry form across the SPMD round), so live state
+        restacks exactly, the unfreeze boundary aligns DOWN to the new span
+        edges, and the activation cache re-captures on the next round —
+        no checkpoint restore anywhere on the path.
+        """
+        if not 0 <= dead_stage < self.S:
+            raise ValueError(
+                f"dead_stage {dead_stage} out of range for S={self.S}")
+        if self.S <= 1:
+            raise RuntimeError("cannot shrink a 1-stage ring")
+        self._regeometry(self.S - 1,
+                         self._resolve_new_spans(self.S - 1, spans, profiles))
+
+    def grow(self, profile: Optional[DeviceProfile] = None, *,
+             spans: Optional[Sequence[Span]] = None,
+             profiles: Optional[Sequence[DeviceProfile]] = None) -> None:
+        """Inverse of ``shrink``: a device joins, S grows by one.
+
+        ``profiles`` (or explicit ``spans``) describe the FULL post-join
+        fleet; passing just ``profile`` appends a joining device to an
+        otherwise-unprofiled ring (balanced split plus the newcomer's
+        speed is meaningless, so that case uses ``spans_from_profiles``
+        over unit-speed incumbents + the newcomer).
+        """
+        new_S = self.S + 1
+        if jax.device_count() < new_S:
+            raise RuntimeError(
+                f"grow to S={new_S} needs {new_S} devices, have "
+                f"{jax.device_count()}")
+        if profiles is None and spans is None and profile is not None:
+            profiles = [DeviceProfile(1.0, float("inf"))] * self.S + [profile]
+        self._regeometry(new_S,
+                         self._resolve_new_spans(new_S, spans, profiles))
 
     # ------------------------------------------------------------------
     # canonical <-> stacked forms (tenant-aware)

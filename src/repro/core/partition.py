@@ -9,6 +9,7 @@ optimal for contiguous partitions with monotone per-device costs.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Iterable, List, Optional, Sequence, Tuple, Union
 
@@ -22,6 +23,30 @@ class DeviceProfile:
     compute_speed: float          # relative FLOP/s (1.0 = reference device)
     memory_mb: float              # DRAM budget
     link_mbps: float = 1000.0     # egress rate to the next ring neighbour
+
+    def __post_init__(self):
+        # A NaN speed poisons assign_layers' binary search silently (every
+        # comparison is False) and a non-positive one inverts it — validate
+        # at construction so a bad profile can never reach the partitioner.
+        if math.isnan(self.compute_speed) or self.compute_speed <= 0:
+            raise ValueError(
+                f"compute_speed must be a positive finite number, got "
+                f"{self.compute_speed!r}")
+        if math.isnan(self.memory_mb) or self.memory_mb <= 0:
+            raise ValueError(
+                f"memory_mb must be positive (inf = unconstrained), got "
+                f"{self.memory_mb!r}")
+        if not (self.link_mbps > 0):         # catches NaN and <= 0 at once
+            raise ValueError(
+                f"link_mbps must be > 0, got {self.link_mbps!r}")
+
+    def slowed(self, factor: float) -> "DeviceProfile":
+        """This device, ``factor``x slower (churn's slowdown event)."""
+        if math.isnan(factor) or factor <= 0:
+            raise ValueError(f"slowdown factor must be > 0, got {factor!r}")
+        return DeviceProfile(compute_speed=self.compute_speed / factor,
+                             memory_mb=self.memory_mb,
+                             link_mbps=self.link_mbps)
 
 
 def assign_layers(layer_costs: Sequence[float], layer_mem_mb: Sequence[float],

@@ -32,12 +32,16 @@ the quantities of the paper's Table I and Fig. 3(b).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.partition import (DeviceProfile, frozen_stage_count,
-                                  normalize_spans, span_sizes,
+from repro.core.partition import (DeviceProfile, align_boundary,
+                                  frozen_stage_count, normalize_spans,
+                                  span_sizes, spans_from_profiles,
                                   uniform_assignment)
+
+CHURN_KINDS = ("crash", "leave", "slowdown", "join")
 
 
 @dataclass(frozen=True)
@@ -74,6 +78,62 @@ class SimResult:
     @property
     def max_memory_mb(self) -> float:
         return max(self.peak_memory_mb.values())
+
+
+@dataclass(frozen=True)
+class ChurnEvent:
+    """One fleet-membership/speed change, applied BEFORE round ``round``.
+
+    ``kind``:
+      * ``'crash'`` / ``'leave'`` — device ``device`` (an index into the
+        CURRENT fleet) drops out; its span is reassigned over the survivors.
+        The two are priced identically here (an orderly leave and a crash
+        both cost a repartition + cache re-capture); executors may treat a
+        ``leave`` more gently (drain first) — the simulator is the
+        worst-case bound.
+      * ``'slowdown'`` — device ``device`` becomes ``factor``x slower
+        (thermal throttling, contention); profiles are re-fit and the ring
+        repartitions if the assignment changes.
+      * ``'join'`` — a device with ``profile`` joins at position ``device``
+        (S grows by one).
+    """
+
+    round: int
+    kind: str
+    device: int
+    factor: float = 2.0                    # slowdown multiplier (kind-specific)
+    profile: Optional[DeviceProfile] = None   # joining device (kind='join')
+
+    def __post_init__(self):
+        if self.kind not in CHURN_KINDS:
+            raise ValueError(
+                f"unknown churn kind {self.kind!r}; expected one of "
+                f"{CHURN_KINDS}")
+        if self.round < 0 or self.device < 0:
+            raise ValueError(f"round/device must be >= 0, got {self}")
+        if self.kind == "slowdown" and not (self.factor > 0):
+            raise ValueError(f"slowdown factor must be > 0, got {self.factor}")
+
+
+def apply_churn(devices: Sequence[DeviceProfile], event: ChurnEvent,
+                ) -> List[DeviceProfile]:
+    """Return the post-event fleet (a new list; input is untouched)."""
+    fleet = list(devices)
+    if event.device >= len(fleet) + (1 if event.kind == "join" else 0):
+        raise ValueError(
+            f"churn event {event} targets device {event.device} but the "
+            f"fleet has {len(fleet)} devices")
+    if event.kind in ("crash", "leave"):
+        if len(fleet) <= 1:
+            raise ValueError("cannot remove the last device from the ring")
+        del fleet[event.device]
+    elif event.kind == "slowdown":
+        fleet[event.device] = fleet[event.device].slowed(event.factor)
+    else:                                           # join
+        prof = event.profile or DeviceProfile(compute_speed=1.0,
+                                              memory_mb=float("inf"))
+        fleet.insert(event.device, prof)
+    return fleet
 
 
 # ---------------------------------------------------------------------------
@@ -319,6 +379,60 @@ def spmd_tick_round(spans, n_micro: int, boundary: int, *,
             "hot_stages": U - F}
 
 
+def full_round_ticks(spans, n_micro: int, boundary: int, *,
+                     packed: bool = False, cached: bool = False,
+                     n_owners: Optional[int] = None) -> Dict[str, int]:
+    """Whole-round SPMD tick total: Phase A (via :func:`spmd_tick_round`)
+    plus Phase B's per-owner hot fwd+bwd fill/drain, ``n_owners * 2 *
+    (M + S_hot - 1)`` — the quantity the elastic bench gates recovery
+    rounds on (a recovery/capture round re-pays Phase A; a steady cached
+    round skips it entirely)."""
+    n_owners = len(normalize_spans(spans)) if n_owners is None else n_owners
+    t = spmd_tick_round(spans, n_micro, boundary, packed=packed,
+                        cached=cached, n_owners=n_owners)
+    hot = t["hot_stages"]
+    t["phase_b_round_ticks"] = n_owners * 2 * (n_micro + hot - 1)
+    t["round_ticks"] = t["phase_a_round_ticks"] + t["phase_b_round_ticks"]
+    return t
+
+
+def predict_recovery(n_blocks: int, survivors: Sequence[DeviceProfile],
+                     n_micro: int, boundary: int, *, packed: bool = True,
+                     spans=None, slots_per_epoch: int = 1) -> Dict[str, object]:
+    """Closed-form/simulated cost of a checkpoint-free shrink recovery.
+
+    Given the surviving fleet, predict the post-shrink layout
+    (``spans_from_profiles`` unless explicit ``spans`` are given), the
+    down-aligned unfreeze boundary, and the tick prices of (a) the recovery
+    round — a full capture round at the new geometry (the cache was
+    rebound, so Phase A runs end to end and re-captures) — and (b) the
+    steady cached round that follows once the cache refills.  Mirrors
+    exactly what ``RingExecutor.shrink`` + the next ``round()`` do, so the
+    executor's measured recovery ledger must equal ``recovery`` here.
+    """
+    new_spans = (normalize_spans(spans, n_blocks) if spans is not None
+                 else spans_from_profiles(n_blocks, survivors))
+    b = align_boundary(new_spans, boundary)
+    S_new = len(new_spans)
+    # a capture/recovery round never packs a cached skip: F == S is excluded
+    # upstream (depth >= 1), and packing needs F >= 2 to save anything
+    F = frozen_stage_count(new_spans, b)
+    eff_packed = packed and F >= 2
+    recovery = full_round_ticks(new_spans, n_micro, b, packed=eff_packed,
+                                n_owners=S_new)
+    steady = full_round_ticks(new_spans, n_micro, b, cached=True,
+                              n_owners=S_new)
+    return {"spans": new_spans, "boundary": b,
+            "frozen_stages": recovery["frozen_stages"],
+            "hot_stages": recovery["hot_stages"],
+            "recovery_round_ticks": recovery["round_ticks"],
+            "recovery_phase_a_ticks": recovery["phase_a_round_ticks"],
+            "steady_round_ticks": steady["round_ticks"],
+            # every slot must re-capture once before all-hit rounds resume
+            "rounds_to_cache_refill": slots_per_epoch,
+            }
+
+
 # ---------------------------------------------------------------------------
 # Multi-round convergence-style run (paper Fig. 3(b) / Table I)
 # ---------------------------------------------------------------------------
@@ -331,22 +445,46 @@ def simulate_training(scheme: str, sim: SimConfig,
                       initial_depth: int = 1,
                       spans: Optional[List[Tuple[int, int]]] = None,
                       slots_per_epoch: int = 1,
+                      churn: Sequence[ChurnEvent] = (),
                       ) -> Tuple[float, float, List[float]]:
     """Returns (total_time_s, peak_memory_mb, cumulative_time_per_round).
 
     For ``scheme='ringada_cached'`` the first ``slots_per_epoch`` rounds after
     every boundary drop are capture rounds (full Phase A, simulated as plain
-    ``ringada``); subsequent rounds at that boundary hit the cache."""
+    ``ringada``); subsequent rounds at that boundary hit the cache.
+
+    ``churn`` replays :class:`ChurnEvent`\\ s: each event fires BEFORE its
+    round (``round=3`` means rounds 0-2 run on the old fleet).  A membership
+    or speed change re-runs the speed-weighted assignment over the new fleet
+    (explicit ``spans`` only survive until the first event — after churn
+    they no longer cover the right device count) and resets the cached
+    scheme's capture counter, so the ``slots_per_epoch`` rounds after a
+    shrink are priced as full capture rounds — the simulated twin of the
+    executor's checkpoint-free cache re-capture.
+    """
+    for ev in churn:
+        if not isinstance(ev, ChurnEvent):
+            raise TypeError(f"churn entries must be ChurnEvent, got {ev!r}")
+    pending = sorted(churn, key=lambda ev: ev.round)
+    fleet = list(devices)
     total, peak, times = 0.0, 0.0, []
     rounds_at_depth, last_depth = 0, None
     for r in range(rounds):
+        while pending and pending[0].round <= r:
+            ev = pending.pop(0)
+            fleet = apply_churn(fleet, ev)
+            if len(fleet) != sim.n_devices:
+                sim = dataclasses.replace(sim, n_devices=len(fleet))
+            spans = [list(sp) for sp in
+                     spans_from_profiles(sim.n_layers, fleet)]
+            rounds_at_depth, last_depth = 0, None   # recovery: re-capture
         depth = min(initial_depth + r // unfreeze_interval, sim.n_layers)
         rounds_at_depth = rounds_at_depth + 1 if depth == last_depth else 0
         last_depth = depth
         eff = scheme
         if scheme == "ringada_cached" and rounds_at_depth < slots_per_epoch:
             eff = "ringada"                       # first epoch: capture rounds
-        res = simulate_round(eff, sim, layers, devices,
+        res = simulate_round(eff, sim, layers, fleet,
                              unfreeze_depth=depth, spans=spans,
                              cache_slots=slots_per_epoch)
         total += res.time_per_round_s

@@ -80,6 +80,7 @@ def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
                packed: bool = True, cache_dtype: str = "native",
                device_speeds: Optional[Any] = None,
                tenants: int = 1, adapter_store: Optional[str] = None,
+               chaos: Any = (), elastic: bool = False,
                save_path: Optional[str] = None, resume: Optional[str] = None,
                policy: Any = None, log=print) -> Dict[str, Any]:
     """Ring-pipeline training across ``n_stages`` devices — a shell over
@@ -107,6 +108,12 @@ def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
     exports every tenant's adapters+moments as named ``AdapterStore``
     bundles (``tenant0``, ``tenant1``, ...) after the run — directly
     hot-servable by ``launch/serve.py --adapter-store``.
+
+    ``chaos`` (the CLI's repeatable ``--chaos ROUND:EVENT:DEVICE[:FACTOR]``)
+    injects churn events mid-run; ``elastic=True`` lets the ring absorb them
+    live — a crash shrinks the ring to the survivors (checkpoint-free, see
+    README "Fault tolerance"), a slowdown is picked up by the straggler
+    detector and repartitioned away.  Without ``elastic``, a crash raises.
     """
     if trainer not in ("fused", "reference"):
         raise ValueError(f"trainer must be 'fused' or 'reference', "
@@ -133,7 +140,15 @@ def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
         # re-deriving them from (possibly omitted) CLI flags would silently
         # resume a slotted cached run as fused+streaming — a different data
         # sequence.
-        sess = RingSession.restore(resume, cfg, tc, policy=policy, log=log)
+        # chaos rounds are relative to THIS run (the wrapper's round counter
+        # starts at 0 on resume); elastic defaults to the checkpointed value
+        kw: Dict[str, Any] = {}
+        if chaos:
+            kw["chaos"] = chaos
+        if elastic:
+            kw["elastic"] = True
+        sess = RingSession.restore(resume, cfg, tc, policy=policy, log=log,
+                                   **kw)
         if sess.backend.kind != "ring":
             raise ValueError(
                 f"--resume checkpoint was saved by the "
@@ -145,7 +160,8 @@ def train_ring(cfg, tc: TrainConfig, *, rounds: int, n_stages: int,
                                   cache_capacity=cache_capacity,
                                   packed=packed, cache_dtype=cache_dtype,
                                   device_profiles=device_speeds,
-                                  tenants=tenants, log=log)
+                                  tenants=tenants, chaos=chaos,
+                                  elastic=elastic, log=log)
         if device_speeds is not None:
             log(f"heterogeneous ring: speeds {list(device_speeds)} -> spans "
                 f"{[list(sp) for sp in sess.backend.spans]}")
@@ -230,6 +246,21 @@ def main() -> None:
                          "speed-weighted layer assignment so faster devices "
                          "hold larger contiguous block spans (Algorithm 1); "
                          "default: balanced spans")
+    ap.add_argument("--chaos", action="append", default=[],
+                    metavar="ROUND:EVENT:DEVICE[:FACTOR]",
+                    help="ring mode: inject a churn event (repeatable) — "
+                         "EVENT in {crash, leave, slowdown, join}, ROUND is "
+                         "when it fires (rounds before it run on the old "
+                         "fleet), DEVICE is the ORIGINAL stage index, FACTOR "
+                         "is the slowdown multiplier (default 2.0). E.g. "
+                         "--chaos 3:crash:2 kills device 2 before round 3; "
+                         "crashes need --elastic to survive")
+    ap.add_argument("--elastic", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="ring mode: absorb churn live — crashes shrink the "
+                         "ring to the survivors (checkpoint-free recovery), "
+                         "stragglers are EWMA-detected from stage timings "
+                         "and repartitioned away (hysteresis-gated)")
     ap.add_argument("--no-packed", action="store_true",
                     help="ring mode: revert Phase A to the per-owner scan "
                          "(S separate M+F-1-tick pipelines per round) "
@@ -261,6 +292,9 @@ def main() -> None:
                      unfreeze_interval=args.unfreeze_interval,
                      n_microbatches=args.microbatches)
     if args.mode == "pjit":
+        if args.chaos or args.elastic:
+            raise SystemExit("--chaos/--elastic are ring-mode features "
+                             "(--mode ring)")
         out = train_pjit(cfg, tc, steps=args.steps, scheme=args.scheme,
                          policy=args.policy, save_path=args.save,
                          resume=args.resume)
@@ -277,6 +311,7 @@ def main() -> None:
                          device_speeds=speeds,
                          tenants=args.tenants,
                          adapter_store=args.adapter_store,
+                         chaos=args.chaos, elastic=args.elastic,
                          save_path=args.save, resume=args.resume)
     print(json.dumps(out["history"][-1], default=float))
 

@@ -197,6 +197,46 @@ print(json.dumps(out))
     assert abs(res["next_loss"] - res["ctrl_next"]) < 1e-5
 
 
+def test_tenant_isolation_survives_elastic_shrink():
+    """Multi-tenant churn: a chaos crash mid-run shrinks the joint T=3 ring
+    4 -> 3 stages.  The shrink restacks ALL tenants' adapters + moments
+    exactly, so (c)'s bit-identity pin must survive it: perturbing tenant
+    2's stream still leaves tenants 0/1's per-round losses bit-unchanged
+    through the shrink round and after, and the partitioned cache
+    re-captures every live tenant's rows (miss x2, then hits again)."""
+    code = PRELUDE + """
+T, tc = 3, make_tc(10**6)
+mk = lambda: RingSession.create(cfg, tc, backend="cached", tenants=T,
+                                slots_per_epoch=2, chaos="2:crash:3",
+                                elastic=True, log=lambda *a: None)
+a, b = mk(), mk()
+tc2 = dataclasses.replace(tc, seed=1234)
+b.data.rbs[2] = RingDataSource(cfg, tc2, S, tenants=T,
+                               slots_per_epoch=2).rbs[2]
+ha = a.run(6, log_every=1)
+hb = b.run(6, log_every=1)
+out = {"a": [[h["tenant_losses"][t] for h in ha] for t in range(T)],
+       "b": [[h["tenant_losses"][t] for h in hb] for t in range(T)],
+       "marks": [bool(h.get("layout_changed")) for h in ha],
+       "hits": [h["cache_hit"] for h in ha],
+       "survivors": ha[-1]["survivors"],
+       "spans": [list(sp) for sp in a.backend.spans],
+       "tenant_hits": ha[-1]["tenant_cache_hits"]}
+print(json.dumps(out))
+"""
+    res = _run_sub(code)
+    assert res["marks"] == [False, False, True, False, False, False]
+    assert res["survivors"] == [0, 1, 2] and len(res["spans"]) == 3
+    # per-tenant cache re-capture: the rebind drops every tenant's entries,
+    # both slots re-capture at the new geometry, then hits resume
+    assert res["hits"] == [False, False, False, False, True, True], res
+    assert all(h > 0 for h in res["tenant_hits"]), res
+    # isolation holds THROUGH the shrink: untouched tenants bit-equal
+    assert res["a"][0] == res["b"][0]
+    assert res["a"][1] == res["b"][1]
+    assert res["a"][2] != res["b"][2]
+
+
 def test_deprecated_persistence_shims_warn(tmp_path):
     """Satellite: ``export_params``/``load`` survive as thin shims over the
     canonical ``backend.export_params()`` / ``_load_into`` — each warns once
